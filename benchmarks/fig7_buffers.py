@@ -1,0 +1,30 @@
+"""Fig. 7 reproduction: NTT runtime vs number of atom buffers (Nb).
+
+Paper claims: (i) without auxiliary buffers there is no advantage (even
+vs software); (ii) one auxiliary buffer improves by an order of
+magnitude; (iii) further buffers give ~1.5-2.5x, more at larger N.
+"""
+from repro.core.pim_config import PimConfig
+from repro.core.pimsim import simulate_ntt
+
+NS = [256, 512, 1024, 2048, 4096, 8192, 16384]
+NBS = [1, 2, 3, 4, 6, 8]
+
+
+def run(emit):
+    table = {}
+    for n in NS:
+        for nb in NBS:
+            res = simulate_ntt(n, PimConfig(num_buffers=nb))
+            table[(n, nb)] = res
+            emit(
+                f"fig7/N={n}/Nb={nb}",
+                res.us,
+                f"acts={res.stats.get('act', 0)};c2={res.stats.get('c2', 0)}",
+            )
+    for n in NS:
+        speedup_aux = table[(n, 1)].ns / table[(n, 2)].ns
+        speedup_more = table[(n, 2)].ns / table[(n, 6)].ns
+        emit(f"fig7/N={n}/speedup_1aux", table[(n, 2)].us, f"x{speedup_aux:.1f}_vs_single_buffer")
+        emit(f"fig7/N={n}/speedup_Nb6", table[(n, 6)].us, f"x{speedup_more:.2f}_vs_Nb2")
+    return table

@@ -1,0 +1,22 @@
+"""Fig. 8 reproduction: sensitivity to CU clock frequency (Nb = 2).
+
+DRAM timing is fixed in ns; only the CU clock scales.  Paper: dropping
+1200 -> 300 MHz slows large-N NTT by only ~1.65x (DRAM-dominated)."""
+from repro.core.pim_config import PimConfig
+from repro.core.pimsim import simulate_ntt
+
+FREQS = [300, 600, 900, 1200]
+NS = [1024, 4096, 16384]
+
+
+def run(emit):
+    out = {}
+    for n in NS:
+        base = None
+        for f in FREQS[::-1]:
+            res = simulate_ntt(n, PimConfig(num_buffers=2, cu_clock_mhz=float(f)))
+            out[(n, f)] = res
+            if f == 1200:
+                base = res
+            emit(f"fig8/N={n}/f={f}MHz", res.us, f"slowdown=x{res.ns / base.ns:.2f}")
+    return out

@@ -1,0 +1,25 @@
+"""Beyond-paper: bank-level parallelism vs shared command-bus contention.
+
+The paper (§VII) expects near-linear speedup from multiple banks and
+leaves the system-level study to future work; this benchmark quantifies
+where the shared command/address bus (including the per-CU-op twiddle
+parameter traffic of §IV-A) caps the scaling."""
+from repro.core.pim_config import PimConfig
+from repro.core.pimsim import simulate_multibank
+
+
+def run(emit):
+    for n in [1024, 4096, 16384]:
+        for nb in (2, 6):
+            knee = None
+            for banks in [1, 2, 4, 8, 16, 32]:
+                r = simulate_multibank(n, banks, PimConfig(num_buffers=nb))
+                emit(
+                    f"multibank/N={n}/Nb={nb}/banks={banks}",
+                    r.latency_ns / 1e3,
+                    f"speedup=x{r.speedup:.1f};eff={r.efficiency:.2f};bus={r.bus_utilization:.2f}",
+                )
+                if knee is None and r.efficiency < 0.95:
+                    knee = banks
+            emit(f"multibank/N={n}/Nb={nb}/knee", 0.0,
+                 f"linear_until~{(knee or 33) // 2}banks")

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,table3]
+"""
+import argparse
+import sys
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.4f},{derived}")
+    sys.stdout.flush()
+
+
+BENCHES = ("table2", "fig7", "fig8", "table3", "tpu_ntt", "multibank")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(BENCHES)
+
+    print("name,us_per_call,derived")
+    if "table2" in only:
+        from benchmarks import table2_area
+
+        table2_area.run(emit)
+    if "fig7" in only:
+        from benchmarks import fig7_buffers
+
+        fig7_buffers.run(emit)
+    if "fig8" in only:
+        from benchmarks import fig8_frequency
+
+        fig8_frequency.run(emit)
+    if "table3" in only:
+        from benchmarks import table3_comparison
+
+        table3_comparison.run(emit)
+    if "tpu_ntt" in only:
+        from benchmarks import tpu_ntt
+
+        tpu_ntt.run(emit)
+        tpu_ntt.correctness_check(emit)
+    if "multibank" in only:
+        from benchmarks import multibank
+
+        multibank.run(emit)
+
+
+if __name__ == "__main__":
+    main()

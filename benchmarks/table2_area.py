@@ -1,0 +1,18 @@
+"""Table II reproduction: PIM area overhead vs Nb (model calibrated to the
+paper's own four points; residual reported).  Checks the headline "less
+than half of Newton's" overhead."""
+from repro.core import area
+
+
+def run(emit):
+    a_cu, a_buf, resid = area.fit_area_model()
+    emit("table2/fit", 0.0, f"A_cu={a_cu:.4f}mm2;A_buf={a_buf:.5f}mm2;resid={resid:.5f}")
+    emit("table2/newton", 0.0, f"{area.NEWTON_AREA_MM2}mm2={area.newton_overhead_pct():.3f}%")
+    for nb in [1, 2, 4, 6, 8]:
+        mm2 = area.cu_area_mm2(nb)
+        paper = area.PAPER_TABLE2.get(nb)
+        emit(
+            f"table2/Nb={nb}",
+            0.0,
+            f"{mm2:.4f}mm2={area.area_overhead_pct(nb):.3f}%;paper={paper}",
+        )

@@ -1,0 +1,75 @@
+"""TPU-adapted NTT kernel: structural roofline terms per mapping choice.
+
+No TPU is attached, so this benchmark derives the three roofline terms
+from the lowered kernel + analytic HBM traffic (the same methodology as
+the model dry-run), for the paper-relevant sizes and the two mapping
+regimes.  The paper's key metric — row activations, i.e. HBM tile
+touches — maps to `hbm_passes`: the fused intra-tile kernel does the
+first log(T) stages in ONE pass; each inter-tile stage adds one more.
+Wall-clock here runs in interpret mode (functional, not indicative).
+"""
+import numpy as np
+
+from repro.core import modmath as mm
+from repro.core.ntt import make_context
+from repro.kernels.ntt import DEFAULT_TILE
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def structural_terms(n: int, batch: int, tile: int):
+    """(hbm_passes, bytes_moved, modmul_count) for one batched NTT."""
+    tile = min(tile, n)
+    stages = int(np.log2(n))
+    intra = min(int(np.log2(tile)), stages)
+    inter = stages - intra
+    passes = 1 + inter  # paper: one "row activation" per tile per pass
+    words = batch * n
+    bytes_moved = passes * 2 * words * 4  # read + write per pass
+    butterflies = batch * (n // 2) * stages
+    return passes, bytes_moved, butterflies
+
+
+def run(emit):
+    batch = 64  # bank-level parallelism analogue
+    for n in [2**12, 2**14, 2**16, 2**17]:
+        for tile in [1024, 8192, 65536]:
+            if tile > n:
+                continue
+            passes, bts, bfs = structural_terms(n, batch, tile)
+            # 1 butterfly = 1 Shoup modmul (~10 uint32 VPU ops via 16-bit
+            # limbs) + add/sub: ~16 elementwise ops -> flops-equivalent.
+            vpu_ops = bfs * 16
+            t_mem = bts / HBM_BW
+            t_comp = vpu_ops / PEAK_FLOPS
+            ai = vpu_ops / bts
+            emit(
+                f"tpu_ntt/N={n}/tile={tile}",
+                t_mem * 1e6,
+                f"hbm_passes={passes};AI={ai:.1f}ops/B;"
+                f"bound={'memory' if t_mem > t_comp else 'compute'}",
+            )
+    # single-buffer analogue: stage-at-a-time (no fusion) = log N passes
+    n = 2**14
+    naive_passes = int(np.log2(n))
+    fused_passes, _, _ = structural_terms(n, batch, DEFAULT_TILE)
+    emit(
+        "tpu_ntt/fusion_win",
+        0.0,
+        f"stagewise={naive_passes}passes;row-centric={fused_passes}passes;"
+        f"x{naive_passes / fused_passes:.1f}_traffic_reduction",
+    )
+
+
+def correctness_check(emit):
+    """Tiny interpret-mode run to prove the benchmarked kernel is the real one."""
+    from repro.kernels.ntt import ntt_pallas
+    from repro.kernels import ref
+
+    ctx = make_context(mm.DEFAULT_Q, 4096)
+    x = np.random.default_rng(0).integers(0, mm.DEFAULT_Q, (2, 4096)).astype(np.uint32)
+    got = np.asarray(ntt_pallas(x, ctx, forward=True, tile=1024))
+    exp = np.asarray(ref.ntt_forward_ref(x, ctx))
+    assert np.array_equal(got, exp)
+    emit("tpu_ntt/kernel_check", 0.0, "interpret-mode==oracle")

@@ -1,0 +1,27 @@
+"""Serve a small LM with batched requests: prefill + lock-step decode with
+KV caches (the decode_32k / long_500k dry-run cells lower this same step).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-4b
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m  # O(1) state
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    res = serve(args.arch, args.batch, args.prompt_len, args.gen, reduced=True)
+    print(f"[serve] {args.arch} (reduced): batch={args.batch} "
+          f"prefill={res['prefill_s']:.2f}s decode={res['decode_s']:.2f}s "
+          f"-> {res['tok_per_s']:.1f} tok/s")
+    print("[serve] first request tokens:", res["generated"][0].tolist())
+
+
+if __name__ == "__main__":
+    main()

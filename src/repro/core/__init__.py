@@ -1,0 +1,2 @@
+"""The paper's contribution: NTT algorithms, row-centric PIM mapping,
+cycle-level simulation, area/energy models."""

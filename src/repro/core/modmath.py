@@ -1,0 +1,263 @@
+"""Modular arithmetic for NTT: host-side (python int / numpy int64) and
+device-side (jnp uint32 16-bit-limb) implementations.
+
+The paper's CU performs ModAdd/Sub and ModMult for arbitrary moduli via
+Montgomery reduction on a 32x32 hardware multiplier.  TPUs have no 64-bit
+integer multiply, so the device-side code emulates the 32x32->64 product
+with 16x16->32 partial products (see DESIGN.md "hardware adaptation").
+
+Conventions: all residues are in [0, q), q < 2^31 so that a+b never wraps
+uint32 and Shoup reduction's 2q intermediate fits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Host-side: primes, roots of unity, parameter precomputation (python ints)
+# ---------------------------------------------------------------------------
+
+#: Default 31-bit NTT-friendly prime: 15 * 2^27 + 1 (supports N | 2^27).
+DEFAULT_Q = 2013265921
+#: A generator of (Z/DEFAULT_Q)^*.
+DEFAULT_GENERATOR = 31
+
+_SMALL_PRIMES = (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37)
+
+
+def is_prime(n: int) -> bool:
+    """Deterministic Miller-Rabin for n < 3.3e24 (covers all 64-bit)."""
+    if n < 2:
+        return False
+    for p in _SMALL_PRIMES:
+        if n % p == 0:
+            return n == p
+    d, r = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        r += 1
+    for a in _SMALL_PRIMES:
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(r - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def find_ntt_prime(two_n: int, bits: int = 31) -> int:
+    """Smallest prime q < 2^bits with q ≡ 1 (mod two_n), searching downward."""
+    if two_n & (two_n - 1):
+        raise ValueError("two_n must be a power of two")
+    q = ((1 << bits) - 1) // two_n * two_n + 1
+    while q > two_n:
+        if is_prime(q):
+            return q
+        q -= two_n
+    raise ValueError(f"no NTT prime below 2^{bits} for order {two_n}")
+
+
+def primitive_root(q: int) -> int:
+    """Smallest primitive root modulo prime q."""
+    factors = []
+    phi = q - 1
+    m = phi
+    d = 2
+    while d * d <= m:
+        if m % d == 0:
+            factors.append(d)
+            while m % d == 0:
+                m //= d
+        d += 1
+    if m > 1:
+        factors.append(m)
+    for g in range(2, q):
+        if all(pow(g, phi // f, q) != 1 for f in factors):
+            return g
+    raise ValueError("no primitive root (q not prime?)")
+
+
+@functools.lru_cache(maxsize=None)
+def root_of_unity(q: int, order: int) -> int:
+    """A primitive `order`-th root of unity mod prime q (requires order | q-1)."""
+    if (q - 1) % order:
+        raise ValueError(f"{order} does not divide q-1={q - 1}")
+    g = primitive_root(q)
+    w = pow(g, (q - 1) // order, q)
+    # Sanity: primitive of exactly this order.
+    assert pow(w, order, q) == 1 and pow(w, order // 2, q) != 1
+    return w
+
+
+def inv_mod(a: int, q: int) -> int:
+    """a^-1 mod q for any modulus with gcd(a, q) == 1 (extended Euclid)."""
+    return pow(a, -1, q)
+
+
+def shoup(w: int, q: int) -> int:
+    """Shoup precomputed companion: floor(w * 2^32 / q).  Requires w < q < 2^31."""
+    return (w << 32) // q
+
+
+def mont_params(q: int):
+    """Montgomery parameters for R = 2^32: (qprime = -q^-1 mod 2^32, R mod q, R^2 mod q)."""
+    qprime = (-inv_mod(q, 1 << 32)) % (1 << 32)
+    r_mod_q = (1 << 32) % q
+    r2_mod_q = (1 << 64) % q
+    return qprime, r_mod_q, r2_mod_q
+
+
+# ---------------------------------------------------------------------------
+# Host-side vectorized oracle ops (numpy, int64 intermediates are exact
+# because q < 2^31 => products < 2^62)
+# ---------------------------------------------------------------------------
+
+
+def np_mulmod(a, b, q: int):
+    return (np.asarray(a, np.int64) * np.asarray(b, np.int64)) % q
+
+
+def np_addmod(a, b, q: int):
+    return (np.asarray(a, np.int64) + np.asarray(b, np.int64)) % q
+
+
+def np_submod(a, b, q: int):
+    return (np.asarray(a, np.int64) - np.asarray(b, np.int64)) % q
+
+
+def np_powmod(base: int, exps, q: int):
+    exps = np.asarray(exps, np.int64)
+    out = np.empty_like(exps)
+    flat = exps.reshape(-1)
+    res = out.reshape(-1)
+    for i, e in enumerate(flat):  # host-side precompute only; not perf critical
+        res[i] = pow(int(base), int(e), q)
+    return out
+
+
+def powers_of(w: int, n: int, q: int) -> np.ndarray:
+    """[w^0, w^1, ..., w^(n-1)] mod q as uint32."""
+    out = np.empty(n, np.uint32)
+    acc = 1
+    for i in range(n):
+        out[i] = acc
+        acc = acc * w % q
+    return out
+
+
+def bit_reverse_indices(n: int) -> np.ndarray:
+    """Permutation p with p[i] = bit-reversal of i in log2(n) bits."""
+    bits = n.bit_length() - 1
+    idx = np.arange(n, dtype=np.int64)
+    rev = np.zeros_like(idx)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+# ---------------------------------------------------------------------------
+# Device-side (jnp) uint32 16-bit-limb arithmetic.
+# These are shared by kernels/ref.py (oracle) and kernels/*.py (Pallas bodies):
+# the SAME code traces into both, so the kernel-vs-ref comparison checks the
+# tiling/scheduling, while these primitives are checked against python ints.
+# ---------------------------------------------------------------------------
+
+_U16 = np.uint32(0xFFFF)
+
+
+def _u32(x):
+    # Python/numpy scalars stay numpy scalars: they fold into the jaxpr as
+    # literals, so Pallas kernel bodies don't capture array constants.
+    if isinstance(x, (int, np.integer)):
+        return np.uint32(x)
+    return jnp.asarray(x, jnp.uint32)
+
+
+def mulhi_u32(a, b):
+    """High 32 bits of the 64-bit product of two uint32 vectors.
+
+    Schoolbook with 16-bit limbs; every intermediate fits uint32:
+      a*b = p_hh*2^32 + (p_lh + p_hl)*2^16 + p_ll
+      hi  = p_hh + (p_lh>>16) + (p_hl>>16)
+            + ((p_ll>>16) + (p_lh&0xFFFF) + (p_hl&0xFFFF)) >> 16
+    """
+    a = _u32(a)
+    b = _u32(b)
+    a_lo, a_hi = a & _U16, a >> 16
+    b_lo, b_hi = b & _U16, b >> 16
+    p_ll = a_lo * b_lo
+    p_lh = a_lo * b_hi
+    p_hl = a_hi * b_lo
+    p_hh = a_hi * b_hi
+    mid = (p_ll >> 16) + (p_lh & _U16) + (p_hl & _U16)  # < 3*2^16, no overflow
+    return p_hh + (p_lh >> 16) + (p_hl >> 16) + (mid >> 16)
+
+
+def mullo_u32(a, b):
+    """Low 32 bits of the product (uint32 multiply wraps)."""
+    return _u32(a) * _u32(b)
+
+
+def addmod_u32(a, b, q):
+    """(a + b) mod q for a,b in [0,q), q < 2^31."""
+    q = _u32(q)
+    s = _u32(a) + _u32(b)
+    return jnp.where(s >= q, s - q, s)
+
+
+def submod_u32(a, b, q):
+    """(a - b) mod q for a,b in [0,q)."""
+    q = _u32(q)
+    d = _u32(a) + q - _u32(b)
+    return jnp.where(d >= q, d - q, d)
+
+
+def shoup_mulmod_u32(a, w, w_shoup, q):
+    """a * w mod q with precomputed w_shoup = floor(w*2^32/q).
+
+    This is the twiddle multiplication in the butterfly: one mulhi (the
+    approximate quotient), two mullo, one conditional subtract.  The paper's
+    CU realizes the same operation with Montgomery; Shoup is the standard
+    choice when one operand is a precomputed constant.
+    """
+    q = _u32(q)
+    quot = mulhi_u32(a, w_shoup)
+    r = mullo_u32(a, w) - mullo_u32(quot, q)  # in [0, 2q) mod 2^32
+    return jnp.where(r >= q, r - q, r)
+
+
+def mont_mul_u32(a, b, q, qprime):
+    """Montgomery product REDC(a*b): returns a*b*2^-32 mod q, inputs in [0,q).
+
+    Faithful analogue of the paper's CU ModMult (Montgomery, arbitrary q).
+    """
+    q = _u32(q)
+    qprime = _u32(qprime)
+    t_lo = mullo_u32(a, b)
+    t_hi = mulhi_u32(a, b)
+    m = mullo_u32(t_lo, qprime)
+    mq_hi = mulhi_u32(m, q)
+    # t_lo + (m*q)_lo == 0 mod 2^32 by construction; carry iff t_lo != 0.
+    carry = (t_lo != np.uint32(0)).astype(jnp.uint32)
+    r = t_hi + mq_hi + carry  # < 2q
+    return jnp.where(r >= q, r - q, r)
+
+
+def to_mont_u32(a, q, qprime, r2_mod_q):
+    return mont_mul_u32(a, _u32(r2_mod_q), q, qprime)
+
+
+def from_mont_u32(a, q, qprime):
+    return mont_mul_u32(a, _u32(1), q, qprime)
+
+
+def mulmod_u32(a, b, q, qprime, r2_mod_q):
+    """General a*b mod q via Montgomery round-trip (for variable x variable)."""
+    return mont_mul_u32(mont_mul_u32(a, b, q, qprime), _u32(r2_mod_q), q, qprime)

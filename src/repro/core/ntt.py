@@ -1,0 +1,321 @@
+"""Reference NTT algorithms (host oracles + batched jnp implementations).
+
+Two flavours are provided:
+
+* **cyclic** NTT  X[k] = sum_j a[j] w^{jk} mod q  (w a primitive N-th root)
+  — matches the textbook DFT-over-Z_q and the O(N^2) oracle.
+
+* **negacyclic** ψ-merged NTT pair (Longa–Naehrig style): forward is
+  Cooley–Tukey (natural order in → bit-reversed out, strides N/2..1),
+  inverse is Gentleman–Sande (bit-reversed in → natural out, strides
+  1..N/2).  ``INTT(NTT(a) ⊙ NTT(b))`` is negacyclic convolution, i.e.
+  multiplication in Z_q[X]/(X^N+1) — the RLWE workload of the paper —
+  with **no explicit bit reversal anywhere**, which is the paper's §II-B
+  observation ("bit reversal can be avoided altogether when all
+  NTT-domain operations are element-wise").
+
+The paper's Algorithms 1–2 use the GS butterfly with increasing strides
+(= our inverse dataflow, mirrored for the forward pass).  The stride
+*set* {1, 2, ..., N/2} — which is what the row-centric mapping cares
+about — is identical in both directions.
+
+All stage loops operate on the LAST axis; leading axes are batch
+("bank-level parallelism" in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import modmath as mm
+
+# ---------------------------------------------------------------------------
+# Twiddle context
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash —
+# make_context is lru_cached, so equal (q, n) share one instance and jit
+# static-arg caching works despite the unhashable numpy table fields.
+class NttContext:
+    """Precomputed tables for a (q, n) negacyclic NTT.
+
+    psi_brv[i]      = psi^brv(i)        (forward stage twiddles, slice [m:2m])
+    psi_inv_brv[i]  = psi^-brv(i)       (inverse stage twiddles, slice [h:2h])
+    *_shoup         = floor(w * 2^32 / q) companions for device-side Shoup mult
+    """
+
+    q: int
+    n: int
+    psi: int
+    psi_inv: int
+    n_inv: int
+    psi_brv: np.ndarray
+    psi_brv_shoup: np.ndarray
+    psi_inv_brv: np.ndarray
+    psi_inv_brv_shoup: np.ndarray
+    n_inv_shoup: int
+    qprime: int  # -q^-1 mod 2^32 (Montgomery)
+    r2_mod_q: int  # 2^64 mod q
+
+    @property
+    def omega(self) -> int:
+        return self.psi * self.psi % self.q
+
+
+@functools.lru_cache(maxsize=None)
+def make_context(q: int, n: int) -> NttContext:
+    if n & (n - 1):
+        raise ValueError("n must be a power of two")
+    psi = mm.root_of_unity(q, 2 * n)
+    psi_inv = mm.inv_mod(psi, q)
+    n_inv = mm.inv_mod(n, q)
+    brv = mm.bit_reverse_indices(n)
+    psi_pows = mm.powers_of(psi, n, q)
+    psi_inv_pows = mm.powers_of(psi_inv, n, q)
+    psi_brv = psi_pows[brv].astype(np.uint32)
+    psi_inv_brv = psi_inv_pows[brv].astype(np.uint32)
+    sh = np.vectorize(lambda w: mm.shoup(int(w), q), otypes=[np.uint32])
+    qprime, _, r2 = mm.mont_params(q)
+    return NttContext(
+        q=q,
+        n=n,
+        psi=psi,
+        psi_inv=psi_inv,
+        n_inv=n_inv,
+        psi_brv=psi_brv,
+        psi_brv_shoup=sh(psi_brv),
+        psi_inv_brv=psi_inv_brv,
+        psi_inv_brv_shoup=sh(psi_inv_brv),
+        n_inv_shoup=mm.shoup(n_inv, q),
+        qprime=qprime,
+        r2_mod_q=r2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# O(N^2) oracles (numpy; small N only)
+# ---------------------------------------------------------------------------
+
+
+def naive_cyclic_ntt(a: np.ndarray, q: int, omega: int) -> np.ndarray:
+    a = np.asarray(a, np.int64)
+    n = a.shape[-1]
+    jk = (np.arange(n)[:, None] * np.arange(n)[None, :]) % n
+    w_pows = mm.powers_of(omega, n, q).astype(np.int64)
+    mat = w_pows[jk]  # [k, j] = w^{jk}
+    # Reduce each product mod q BEFORE summing (a plain matmul would
+    # overflow int64 for n >= 4), then sum residues (< n * 2^31 << 2^63).
+    prods = (a[..., None, :] * mat) % q  # [..., k, j]
+    return np.asarray(prods.sum(axis=-1) % q, np.uint32)
+
+
+def naive_negacyclic_ntt(a: np.ndarray, ctx: NttContext) -> np.ndarray:
+    """X[k] = sum_j a[j] psi^j w^{jk}  (natural-order output)."""
+    scaled = mm.np_mulmod(a, mm.powers_of(ctx.psi, ctx.n, ctx.q), ctx.q)
+    return naive_cyclic_ntt(scaled, ctx.q, ctx.omega)
+
+
+def schoolbook_negacyclic(a: np.ndarray, b: np.ndarray, q: int) -> np.ndarray:
+    """a*b mod (X^N + 1) by O(N^2) schoolbook — polymul oracle."""
+    a = np.asarray(a, np.int64)
+    b = np.asarray(b, np.int64)
+    n = a.shape[-1]
+    out = np.zeros(n, np.int64)
+    for i in range(n):
+        prod = a[i] * b % q
+        wrap = n - i
+        out[i:] = (out[i:] + prod[:wrap]) % q
+        out[:i] = (out[:i] - prod[wrap:]) % q  # X^N = -1
+    return np.asarray(out % q, np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Stage plans (shared by numpy/jnp refs, the PIM mapper and the TPU kernel)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One butterfly stage over the last axis.
+
+    blocks   : number of independent blocks (each has one twiddle)
+    stride   : distance between butterfly partners
+    tw_lo    : twiddle table slice start (table[tw_lo : tw_lo + blocks])
+    gs       : True = Gentleman–Sande butterfly (a+b, (a-b)*w),
+               False = Cooley–Tukey (a + w*b, a - w*b)
+    """
+
+    blocks: int
+    stride: int
+    tw_lo: int
+    gs: bool
+
+
+def forward_stages(n: int) -> list[Stage]:
+    """CT forward, natural in -> bit-reversed out; strides N/2, N/4, ..., 1."""
+    stages = []
+    t, m = n, 1
+    while m < n:
+        t //= 2
+        stages.append(Stage(blocks=m, stride=t, tw_lo=m, gs=False))
+        m *= 2
+    return stages
+
+
+def inverse_stages(n: int) -> list[Stage]:
+    """GS inverse, bit-reversed in -> natural out; strides 1, 2, ..., N/2.
+
+    This is the paper's Algorithm 1/2 dataflow orientation (m increasing).
+    """
+    stages = []
+    t, m = 1, n
+    while m > 1:
+        h = m // 2
+        stages.append(Stage(blocks=h, stride=t, tw_lo=h, gs=True))
+        t *= 2
+        m //= 2
+    return stages
+
+
+def _np_stage(a: np.ndarray, stage: Stage, table: np.ndarray, q: int) -> np.ndarray:
+    """Apply one stage over the last axis (numpy int64 exact)."""
+    lead = a.shape[:-1]
+    n = a.shape[-1]
+    tw = table[stage.tw_lo : stage.tw_lo + stage.blocks].astype(np.int64)
+    x = a.reshape(*lead, stage.blocks, 2, stage.stride).astype(np.int64)
+    u, v = x[..., 0, :], x[..., 1, :]
+    w = tw[:, None]
+    if stage.gs:
+        out0 = (u + v) % q
+        out1 = (u - v) * w % q
+    else:
+        wv = v * w % q
+        out0 = (u + wv) % q
+        out1 = (u - wv) % q
+    out = np.stack([out0, out1], axis=-2) % q
+    return np.asarray(out.reshape(*lead, n), np.uint32)
+
+
+def ntt_forward_np(a: np.ndarray, ctx: NttContext) -> np.ndarray:
+    """Negacyclic forward NTT, natural in -> bit-reversed out."""
+    x = np.asarray(a, np.uint32)
+    for st in forward_stages(ctx.n):
+        x = _np_stage(x, st, ctx.psi_brv, ctx.q)
+    return x
+
+
+def ntt_inverse_np(a: np.ndarray, ctx: NttContext) -> np.ndarray:
+    """Negacyclic inverse NTT, bit-reversed in -> natural out (scaled by 1/N)."""
+    x = np.asarray(a, np.uint32)
+    for st in inverse_stages(ctx.n):
+        x = _np_stage(x, st, ctx.psi_inv_brv, ctx.q)
+    return np.asarray(mm.np_mulmod(x, ctx.n_inv, ctx.q), np.uint32)
+
+
+def polymul_negacyclic_np(a, b, ctx: NttContext) -> np.ndarray:
+    """a*b in Z_q[X]/(X^N+1) via eq. (1) of the paper."""
+    ah = ntt_forward_np(a, ctx)
+    bh = ntt_forward_np(b, ctx)
+    return ntt_inverse_np(mm.np_mulmod(ah, bh, ctx.q), ctx)
+
+
+# -- cyclic wrappers (match the naive DFT oracle) ---------------------------
+
+
+def cyclic_ntt_np(a: np.ndarray, q: int, n: int | None = None) -> np.ndarray:
+    """Cyclic NTT (natural in -> natural out); equals naive_cyclic_ntt.
+
+    Implemented through the negacyclic machinery: since
+    NTT_neg(a)[k] = sum_j a[j] psi^j w^{jk}, scaling the input by psi^{-j}
+    gives the plain cyclic transform; the forward pass emits bit-reversed
+    order, which we undo at the end.
+    """
+    a = np.asarray(a, np.uint32)
+    n = n or a.shape[-1]
+    ctx = make_context(q, n)
+    psi_inv_pows = mm.powers_of(ctx.psi_inv, n, q)
+    scaled = np.asarray(mm.np_mulmod(a, psi_inv_pows, q), np.uint32)
+    brv = mm.bit_reverse_indices(n)
+    out = ntt_forward_np(scaled, ctx)
+    inv_perm = np.argsort(brv)
+    return out[..., inv_perm]
+
+
+# ---------------------------------------------------------------------------
+# jnp batched implementation (uint32 limb arithmetic — used as kernels oracle)
+# ---------------------------------------------------------------------------
+
+
+def _jnp_stage(x, stage: Stage, table, table_shoup, q: int):
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    tw = jnp.asarray(table[stage.tw_lo : stage.tw_lo + stage.blocks])
+    tw_sh = jnp.asarray(table_shoup[stage.tw_lo : stage.tw_lo + stage.blocks])
+    xr = x.reshape(*lead, stage.blocks, 2, stage.stride)
+    u, v = xr[..., 0, :], xr[..., 1, :]
+    w = tw[:, None]
+    w_sh = tw_sh[:, None]
+    if stage.gs:
+        out0 = mm.addmod_u32(u, v, q)
+        out1 = mm.shoup_mulmod_u32(mm.submod_u32(u, v, q), w, w_sh, q)
+    else:
+        wv = mm.shoup_mulmod_u32(v, w, w_sh, q)
+        out0 = mm.addmod_u32(u, wv, q)
+        out1 = mm.submod_u32(u, wv, q)
+    return jnp.stack([out0, out1], axis=-2).reshape(*lead, n)
+
+
+def ntt_forward_jnp(a, ctx: NttContext):
+    x = jnp.asarray(a, jnp.uint32)
+    for st in forward_stages(ctx.n):
+        x = _jnp_stage(x, st, ctx.psi_brv, ctx.psi_brv_shoup, ctx.q)
+    return x
+
+
+def ntt_inverse_jnp(a, ctx: NttContext):
+    x = jnp.asarray(a, jnp.uint32)
+    for st in inverse_stages(ctx.n):
+        x = _jnp_stage(x, st, ctx.psi_inv_brv, ctx.psi_inv_brv_shoup, ctx.q)
+    n_inv = jnp.uint32(ctx.n_inv)
+    n_inv_sh = jnp.uint32(ctx.n_inv_shoup)
+    return mm.shoup_mulmod_u32(x, n_inv, n_inv_sh, ctx.q)
+
+
+def polymul_negacyclic_jnp(a, b, ctx: NttContext):
+    ah = ntt_forward_jnp(a, ctx)
+    bh = ntt_forward_jnp(b, ctx)
+    qprime, _, r2 = ctx.qprime, None, ctx.r2_mod_q
+    prod = mm.mulmod_u32(ah, bh, ctx.q, qprime, r2)
+    return ntt_inverse_jnp(prod, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Four-step (transpose) decomposition — the TPU-friendly inter-row alternative
+# ---------------------------------------------------------------------------
+
+
+def four_step_cyclic_np(a: np.ndarray, q: int, n1: int, n2: int) -> np.ndarray:
+    """Cyclic NTT of size n1*n2 as: columns-NTT(n2), twiddle, rows-NTT(n1), T.
+
+    Input natural order with n = i1*n2 + i2 ... we use the standard
+    decomposition with input read as a (n1 x n2) row-major matrix:
+      X[k2*n1 + k1] = NTT1_{n1, rows->k1}( w_N^{j1*k2} * NTT2_{n2, cols j1} )
+    """
+    n = n1 * n2
+    a = np.asarray(a, np.uint32).reshape(n1, n2)
+    # step 1: size-n1 NTT down each column (axis 0)
+    step1 = cyclic_ntt_np(a.T, q, n1)  # shape (n2, n1), rows are columns of a
+    # step 2: twiddle w_N^{j... } — indices (k1, j2)
+    w = mm.root_of_unity(q, n)
+    k1 = np.arange(n1)[None, :]
+    j2 = np.arange(n2)[:, None]
+    tw = mm.np_powmod(w, (k1 * j2) % n, q)
+    step2 = mm.np_mulmod(step1, tw, q)
+    # step 3: size-n2 NTT along rows of the (n2, n1) matrix's other axis:
+    step3 = cyclic_ntt_np(step2.T, q, n2)  # (n1, n2)
+    # step 4: output X[k2*n1 + k1] -> transpose to natural order
+    return np.asarray(step3.T.reshape(n), np.uint32)

@@ -1,0 +1,262 @@
+"""Cycle-level timing model of one NTT-PIM bank (paper §VI: in-house
+simulator = MC front-end + DRAMsim3-style bank timing).
+
+The scheduler is **in-order issue, dependency-driven start** — the MC
+issues commands in program order on the shared command bus, and each
+command begins as soon as (a) the bus is free, (b) its hardware resources
+(bank column path, CU, buffers) are free, and (c) its data dependencies
+are met.  Pipelining (§V, Fig 6) *emerges* from buffer availability: with
+Nb=2 the next butterfly's reads must wait for the previous writes (the
+buffers are busy), while with Nb>=4 rotated buffer pairs let reads overlap
+compute — exactly the paper's observation that "to overlap n executions
+requires n times as many buffers".  `pipelined=False` forces strictly
+serial execution (Fig 6a) for the ablation.
+
+Clock-domain split (Fig 8 protocol): DRAM command/timing parameters are
+fixed in ns (Table I cycles at 1200 MHz); CU compute latency scales with
+the CU clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Iterable
+
+from repro.core.mapping import (
+    Act,
+    BUWord,
+    C1,
+    C2,
+    CMul,
+    ColRead,
+    ColWrite,
+    Command,
+    Mark,
+    WordLoad,
+    WordStore,
+)
+from repro.core.pim_config import EnergyModel, PimConfig
+
+
+@dataclasses.dataclass
+class TimingResult:
+    ns: float
+    stats: dict
+    phase_ns: dict
+
+    @property
+    def us(self) -> float:
+        return self.ns / 1e3
+
+    def cycles(self, cfg: PimConfig) -> float:
+        return self.ns / cfg.dram_ns
+
+    def energy_nj(self, model: EnergyModel | None = None) -> float:
+        return (model or EnergyModel()).energy_nj(self.stats)
+
+
+class BankTimer:
+    def __init__(self, cfg: PimConfig, pipelined: bool = True):
+        self.cfg = cfg
+        self.pipelined = pipelined
+        d = cfg.dram_ns
+        c = cfg.cu_ns
+        # latencies in ns
+        self.t_bus = 1 * d
+        self.t_ccd = cfg.tCCD * d
+        self.t_cl = cfg.CL * d
+        self.t_act = (cfg.tRP + cfg.tRCD) * d  # PRE + ACT to column-ready
+        self.t_ras = cfg.tRAS * d
+        self.t_wr = cfg.tWR * d
+        self.t_c1 = cfg.c1_latency * c
+        self.t_c2 = cfg.c2_latency * c
+        self.t_c2_extra = cfg.atom_words * c  # per extra grouped atom pair
+        self.t_buw = cfg.bu_word_latency * c
+        self.t_param = cfg.param_load_cycles * d  # twiddle params on the bus
+
+    def simulate(self, commands: Iterable[Command]) -> TimingResult:
+        cfg = self.cfg
+        nb = max(1, cfg.num_buffers)
+        bus_t = 0.0
+        col_t = 0.0  # column channel free
+        cu_t = 0.0
+        row_usable_t = 0.0
+        act_start_ok = 0.0  # tRAS / tWR gating for the next activate
+        open_row = None
+        data_ready = [0.0] * nb  # buffer contents valid
+        buf_free = [0.0] * nb  # last consumer done (WAR hazard)
+        reg_ready = [0.0, 0.0]
+        row_quiesce = 0.0  # last in-flight column transfer on the open row
+        end_t = 0.0
+        serial_barrier = 0.0
+        stats: dict = defaultdict(int)
+        phase_ns: dict = {}
+        phase_name = "intra"
+        phase_start = 0.0
+
+        next_ref = cfg.tREFI_ns
+
+        def begin(*deps: float) -> float:
+            return max(bus_t, serial_barrier, *deps)
+
+        def dram_begin(*deps: float) -> float:
+            """begin() + periodic refresh stall (bank busy tRFC every tREFI)."""
+            nonlocal next_ref
+            s = begin(*deps)
+            while s >= next_ref:
+                stats["refresh"] += 1
+                s = max(s, next_ref + cfg.tRFC_ns)
+                next_ref += cfg.tREFI_ns
+            return s
+
+        for cmd in commands:
+            if isinstance(cmd, Mark):
+                phase_ns[phase_name] = phase_ns.get(phase_name, 0.0) + (end_t - phase_start)
+                phase_name, phase_start = cmd.name, end_t
+                continue
+
+            if isinstance(cmd, Act):
+                # PRE may not cut off in-flight transfers or write recovery.
+                s = dram_begin(act_start_ok, row_quiesce)
+                done = s + self.t_act
+                open_row = cmd.row
+                row_usable_t = done
+                act_start_ok = s + self.t_ras
+                stats["act"] += 1
+            elif isinstance(cmd, ColRead):
+                assert open_row == cmd.row
+                s = dram_begin(col_t, row_usable_t, buf_free[cmd.buf])
+                col_t = s + self.t_ccd
+                done = s + self.t_cl + self.t_ccd
+                data_ready[cmd.buf] = done
+                row_quiesce = max(row_quiesce, done)
+                stats["col_read"] += 1
+            elif isinstance(cmd, ColWrite):
+                assert open_row == cmd.row
+                s = dram_begin(col_t, row_usable_t, data_ready[cmd.buf])
+                col_t = s + self.t_ccd
+                done = s + self.t_ccd
+                buf_free[cmd.buf] = done
+                act_start_ok = max(act_start_ok, done + self.t_wr)
+                row_quiesce = max(row_quiesce, done)
+                stats["col_write"] += 1
+            elif isinstance(cmd, C1):
+                # (w0, r_w) parameters stream over the shared bus first.
+                s = begin(cu_t, data_ready[cmd.buf]) + self.t_param
+                done = s + self.t_c1
+                cu_t = done
+                data_ready[cmd.buf] = done
+                buf_free[cmd.buf] = done
+                stats["c1"] += 1
+                stats["bu_ops"] += (cfg.atom_words // 2) * (cmd.stages_hi - cmd.stages_lo)
+            elif isinstance(cmd, C2):
+                deps = [data_ready[b] for b in cmd.bufs_u + cmd.bufs_v]
+                s = begin(cu_t, *deps) + self.t_param
+                done = s + self.t_c2 + self.t_c2_extra * (len(cmd.bufs_u) - 1)
+                cu_t = done
+                for b in cmd.bufs_u + cmd.bufs_v:
+                    data_ready[b] = done
+                    buf_free[b] = done
+                stats["c2"] += 1
+                stats["bu_ops"] += cfg.atom_words * len(cmd.bufs_u)
+            elif isinstance(cmd, CMul):
+                s = begin(cu_t, data_ready[cmd.buf_u], data_ready[cmd.buf_v]) + self.t_param
+                done = s + self.t_c2
+                cu_t = done
+                data_ready[cmd.buf_u] = done
+                buf_free[cmd.buf_u] = done
+                buf_free[cmd.buf_v] = done
+                stats["cmul"] += 1
+            elif isinstance(cmd, WordLoad):
+                assert open_row == cmd.row
+                s = dram_begin(col_t, row_usable_t, reg_ready[cmd.reg])
+                col_t = s + self.t_ccd
+                done = s + self.t_cl
+                reg_ready[cmd.reg] = done
+                row_quiesce = max(row_quiesce, done)
+                stats["word_load"] += 1
+            elif isinstance(cmd, WordStore):
+                assert open_row == cmd.row
+                s = dram_begin(col_t, row_usable_t, reg_ready[cmd.reg])
+                col_t = s + self.t_ccd
+                done = s + self.t_ccd
+                act_start_ok = max(act_start_ok, done + self.t_wr)
+                row_quiesce = max(row_quiesce, done)
+                stats["word_store"] += 1
+            elif isinstance(cmd, BUWord):
+                s = begin(cu_t, reg_ready[0], reg_ready[1])
+                done = s + self.t_buw
+                cu_t = done
+                reg_ready[0] = reg_ready[1] = done
+                stats["bu_word"] += 1
+                stats["bu_ops"] += 1
+            else:  # pragma: no cover
+                raise TypeError(cmd)
+
+            bus_t = s + self.t_bus
+            end_t = max(end_t, done)
+            if not self.pipelined:
+                serial_barrier = done
+
+        phase_ns[phase_name] = phase_ns.get(phase_name, 0.0) + (end_t - phase_start)
+        return TimingResult(ns=end_t, stats=dict(stats), phase_ns=phase_ns)
+
+
+def simulate_ntt(
+    n: int,
+    cfg: PimConfig | None = None,
+    forward: bool = False,
+    pipelined: bool = True,
+) -> TimingResult:
+    """Map + time one size-n NTT on one bank (no functional execution)."""
+    from repro.core.mapping import RowCentricMapper
+
+    cfg = cfg or PimConfig()
+    cmds = RowCentricMapper(cfg, n, forward=forward).commands()
+    return BankTimer(cfg, pipelined=pipelined).simulate(cmds)
+
+
+@dataclasses.dataclass
+class MultiBankResult:
+    banks: int
+    latency_ns: float
+    speedup: float
+    efficiency: float
+    bus_utilization: float
+
+
+def simulate_multibank(n: int, banks: int, cfg: PimConfig | None = None) -> MultiBankResult:
+    """Bank-level parallelism under SHARED command-bus contention.
+
+    The paper (§VII) expects near-linear speedup from running independent
+    NTTs on independent banks, leaving the system-level check as future
+    work.  All banks in a channel share one command/address bus, and
+    NTT-PIM additionally streams (w0, r_w) parameters over it per CU op
+    (§IV-A), so the bus eventually serializes the banks:
+
+        latency(k) >= max( single_bank_latency,
+                           k * bus_cycles_one_bank * t_cycle )
+
+    where bus_cycles_one_bank = #commands + param_load_cycles * #CU-ops.
+    This lower-bound contention model is exact in the two asymptotes and
+    conservative in between (no inter-bank reordering credit).
+    """
+    cfg = cfg or PimConfig()
+    single = simulate_ntt(n, cfg)
+    st = single.stats
+    n_cmds = sum(
+        st.get(k, 0)
+        for k in ("act", "col_read", "col_write", "c1", "c2", "cmul",
+                   "word_load", "word_store", "bu_word")
+    )
+    cu_ops = st.get("c1", 0) + st.get("c2", 0) + st.get("cmul", 0)
+    bus_ns_one = (n_cmds + cfg.param_load_cycles * cu_ops) * cfg.dram_ns
+    latency = max(single.ns, banks * bus_ns_one)
+    speedup = banks * single.ns / latency
+    return MultiBankResult(
+        banks=banks,
+        latency_ns=latency,
+        speedup=speedup,
+        efficiency=speedup / banks,
+        bus_utilization=min(1.0, banks * bus_ns_one / latency),
+    )

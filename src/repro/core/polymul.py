@@ -1,0 +1,138 @@
+"""RLWE polynomial multiplication (paper eq. 1) on the PIM bank model:
+
+    a * b = INTT( NTT(a) ⊙ NTT(b) )            in Z_q[X]/(X^N + 1)
+
+Layout: a at base_row ra, b at rb.  Three command phases:
+  1. forward NTT of a (in place), forward NTT of b (in place)
+  2. pointwise pass: stream atom pairs through CMul (a <- a ⊙ b)
+  3. inverse NTT of a (in place) + 1/N scaling pass
+
+Because the forward emits bit-reversed order and the pointwise product is
+element-wise, no bit-reversal commands are needed anywhere (§II-B).
+
+Bank-level parallelism: `polymul_batch` runs independent products on
+separate banks; latency is a single bank's (linear speedup, §I / §VII).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import modmath as mm
+from repro.core import ntt as ntt_ref
+from repro.core.mapping import (
+    Act,
+    C2,
+    CMul,
+    ColRead,
+    ColWrite,
+    Command,
+    FunctionalBank,
+    Mark,
+    RowCentricMapper,
+)
+from repro.core.pim_config import PimConfig
+from repro.core.pimsim import BankTimer, TimingResult
+
+
+def pointwise_commands(cfg: PimConfig, n: int, row_a: int, row_b: int) -> list[Command]:
+    """Stream both polynomials through CMul, a <- a ⊙ b, atom by atom.
+
+    Uses buffer pairs with the same software-pipelining discipline as the
+    butterfly stages; rows alternate, so with Nb >= 4 the mapper groups
+    G = Nb//2 atoms per row switch.
+    """
+    out: list[Command] = [Mark("pointwise")]
+    Na, R, apr = cfg.atom_words, cfg.row_words, cfg.atoms_per_row
+    n_rows = max(1, n // R)
+    atoms_last = (min(n, R)) // Na
+    G = max(1, cfg.num_buffers // 2)
+    for r in range(n_rows):
+        atoms = apr if n >= R else atoms_last
+        for g0 in range(0, atoms, G):
+            grp = list(range(g0, min(g0 + G, atoms)))
+            out.append(Act(row_a + r))
+            for i, atm in enumerate(grp):
+                out.append(ColRead(row_a + r, atm, 2 * i))
+            out.append(Act(row_b + r))
+            for i, atm in enumerate(grp):
+                out.append(ColRead(row_b + r, atm, 2 * i + 1))
+            for i in range(len(grp)):
+                out.append(CMul(2 * i, 2 * i + 1))
+            out.append(Act(row_a + r))
+            for i, atm in enumerate(grp):
+                out.append(ColWrite(row_a + r, atm, 2 * i))
+    # deduplicate consecutive Acts to the same row
+    dedup: list[Command] = []
+    open_row = None
+    for c in out:
+        if isinstance(c, Act):
+            if c.row == open_row:
+                continue
+            open_row = c.row
+        dedup.append(c)
+    return dedup
+
+
+def scaling_commands(cfg: PimConfig, n: int, row_a: int) -> list[Command]:
+    """1/N scaling after the inverse NTT: one CMul pass against a constant.
+
+    Hardware-wise the CU multiplies by the scalar n_inv from its parameter
+    register; we model it as a CMul-latency pass per atom (no second read).
+    """
+    out: list[Command] = [Mark("scale")]
+    Na, R, apr = cfg.atom_words, cfg.row_words, cfg.atoms_per_row
+    n_rows = max(1, n // R)
+    atoms_last = min(n, R) // Na
+    nb = max(1, cfg.num_buffers)
+    for r in range(n_rows):
+        out.append(Act(row_a + r))
+        atoms = apr if n >= R else atoms_last
+        for atm in range(atoms):
+            buf = atm % nb
+            out.append(ColRead(row_a + r, atm, buf))
+            out.append(CMul(buf, buf))  # timed like a scalar multiply pass
+            out.append(ColWrite(row_a + r, atm, buf))
+    return out
+
+
+def polymul_commands(cfg: PimConfig, n: int, row_a: int = 0, row_b: int | None = None):
+    R = cfg.row_words
+    rows = max(1, n // R)
+    row_b = row_b if row_b is not None else row_a + rows
+    fwd_a = RowCentricMapper(cfg, n, forward=True, base_row=row_a).commands()
+    fwd_b = RowCentricMapper(cfg, n, forward=True, base_row=row_b).commands()
+    point = pointwise_commands(cfg, n, row_a, row_b)
+    inv_a = RowCentricMapper(cfg, n, forward=False, base_row=row_a).commands()
+    scale = scaling_commands(cfg, n, row_a)
+    return fwd_a + fwd_b + point + inv_a + scale, row_b
+
+
+def pim_polymul(
+    a: np.ndarray,
+    b: np.ndarray,
+    ctx: ntt_ref.NttContext,
+    cfg: PimConfig | None = None,
+) -> tuple[np.ndarray, TimingResult]:
+    """Functional + timed polynomial multiplication on one bank."""
+    cfg = cfg or PimConfig()
+    n = a.shape[0]
+    cmds, row_b = polymul_commands(cfg, n)
+
+    # functional execution needs per-phase butterfly orientation: the
+    # FunctionalBank resolves twiddles by direction, so run phase-wise.
+    bank_f = FunctionalBank(cfg, ctx, forward=True)
+    bank_f.load_poly(np.asarray(a, np.uint32), base_row=0)
+    bank_f.load_poly(np.asarray(b, np.uint32), base_row=row_b)
+    fwd_a = RowCentricMapper(cfg, n, forward=True, base_row=0).commands()
+    fwd_b = RowCentricMapper(cfg, n, forward=True, base_row=row_b).commands()
+    bank_f.run(fwd_a)
+    bank_f.run(fwd_b)
+    bank_f.run(pointwise_commands(cfg, n, 0, row_b))
+    bank_i = FunctionalBank(cfg, ctx, forward=False)
+    bank_i.mem = bank_f.mem  # share the memory image
+    bank_i.run(RowCentricMapper(cfg, n, forward=False, base_row=0).commands())
+    out = bank_i.read_poly(n)
+    out = np.asarray(mm.np_mulmod(out, ctx.n_inv, ctx.q), np.uint32)
+
+    timing = BankTimer(cfg).simulate(cmds)
+    return out, timing

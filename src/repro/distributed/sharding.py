@@ -1,0 +1,231 @@
+"""Sharding rules: parameter/optimizer/cache/batch PartitionSpecs.
+
+Parallelism map (DESIGN.md §5):
+  data axes ("pod", "data")  : DP for activations + FSDP (ZeRO-3) for
+                               params/optimizer state
+  model axis ("model")       : TP for attention heads & MLP hidden, EP
+                               for MoE experts, sequence-sharding for
+                               long-context KV caches
+
+Rules are name+shape based and *divisibility-checked*: an axis that does
+not divide the dimension is dropped (replicated) rather than producing
+an invalid sharding — e.g. mamba2-780m's 48 SSD heads shard over
+model=16, but a 12-head whisper config falls back to replication.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_NAME_RE = re.compile(r"\['([^']+)'\]")
+
+
+def _leaf_name(path: str) -> str:
+    names = _NAME_RE.findall(path)
+    return names[-1] if names else path
+
+
+def dp_axes(mesh: Mesh):
+    """The combined data-parallel (FSDP) axes present in the mesh."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def _fits(mesh: Mesh, axes, dim: int) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return dim % size == 0
+
+
+def _sanitize(mesh: Mesh, spec: P, shape) -> P:
+    out = []
+    for axes, dim in zip(spec, shape):
+        out.append(axes if _fits(mesh, axes, dim) else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules (applied to path strings from tree_flatten_with_path)
+# ---------------------------------------------------------------------------
+
+
+def _param_spec(path: str, ndim: int, mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    dp = dp if dp else None
+
+    def stacked(*spec):
+        """Block params carry a leading (reps,) stack dim."""
+        return P(None, *spec) if "blocks" in path else P(*spec)
+
+    leaf = _leaf_name(path)
+    if "embed" in path and ndim == 2:
+        # vocab over FSDP (big dim), d over model: keeps the gather output's
+        # batch dim free to follow the tokens' data sharding.
+        return P(dp, "model")
+    if "lm_head" in path:
+        return P(dp, "model")  # d FSDP-gathered at use, vocab over TP
+    if leaf in ("wq", "wk", "wv"):
+        return stacked(dp, "model")
+    if leaf == "wo" and "mixer" in path or leaf == "wo" and "cross" in path:
+        return stacked("model", dp)
+    if leaf == "router":
+        return stacked(dp, None)
+    if leaf in ("wi", "wg"):
+        if ndim - ("blocks" in path) == 3:  # MoE (E, D, F): experts over model
+            return stacked("model", dp, None)
+        return stacked(dp, "model")
+    if leaf == "wo":  # ffn down-projection
+        if ndim - ("blocks" in path) == 3:  # MoE (E, F, D)
+            return stacked("model", None, dp)
+        return stacked("model", dp)
+    if leaf == "in_proj":
+        return stacked(dp, "model")
+    if leaf == "out_proj":
+        return stacked("model", dp)
+    if leaf == "conv_w":
+        return stacked(None, "model")
+    if leaf in ("a_log", "skip_d", "dt_bias"):
+        return stacked("model")
+    # norms, biases, scalars: replicate (beyond the stack dim)
+    return stacked(*([None] * (ndim - ("blocks" in path))))
+
+
+def param_shardings(mesh: Mesh, params_shape) -> dict:
+    """NamedSharding pytree for a params (or ShapeDtypeStruct) pytree."""
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        spec = _param_spec(pstr, leaf.ndim, mesh)
+        spec = _sanitize(mesh, P(*spec, *([None] * (leaf.ndim - len(spec)))), leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_shardings(mesh: Mesh, opt_shape, params_shape=None) -> dict:
+    """Optimizer moments follow their parameter's sharding (same shapes).
+
+    Adafactor's factored vectors drop the factored-out dim from the
+    parameter spec: vr = spec[:-1], vc = spec[:-2] + spec[-1:] — without
+    this, a 1T-param MoE's row factors would replicate at ~TB scale."""
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        leaf_name = _leaf_name(pstr)
+        if leaf_name == "vr":
+            spec = _param_spec(pstr, leaf.ndim + 1, mesh)
+            spec = P(*(tuple(spec) + (None,) * (leaf.ndim + 1 - len(spec)))[:-1])
+        elif leaf_name == "vc":
+            full = _param_spec(pstr, leaf.ndim + 1, mesh)
+            full = tuple(full) + (None,) * (leaf.ndim + 1 - len(full))
+            spec = P(*(full[:-2] + full[-1:]))
+        else:
+            spec = _param_spec(pstr, leaf.ndim, mesh)
+            spec = P(*(tuple(spec) + (None,) * (leaf.ndim - len(spec)))[: leaf.ndim])
+        return NamedSharding(mesh, _sanitize(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, opt_shape)
+
+
+# ---------------------------------------------------------------------------
+# batch / activation / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(mesh: Mesh, batch_shape) -> dict:
+    dp = dp_axes(mesh) or None
+
+    def one(path, leaf):
+        spec = P(dp, *([None] * (leaf.ndim - 1)))
+        return NamedSharding(mesh, _sanitize(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+def cache_shardings(mesh: Mesh, cache_shape) -> list:
+    """KV caches: batch over DP; cache LENGTH over model (sequence
+    sharding — kv-head counts (8) don't divide model=16, and length
+    sharding keeps the 32k/500k caches within per-device HBM; XLA inserts
+    the partial-softmax all-reduce).  SSM states: heads over model."""
+    dp = dp_axes(mesh) or None
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        if "conv" in pstr:  # (reps, B, W-1, xbc)
+            spec = P(None, dp, None, "model")
+        elif "state" in pstr:  # (reps, B, H, P, N)
+            spec = P(None, dp, "model", None, None)
+        elif leaf.ndim == 5:
+            spec = P(None, dp, "model", None, None)
+        else:  # (reps, B, L, KV, hd) attn / cross caches
+            spec = P(None, dp, "model", None, None)
+        spec = P(*spec[: leaf.ndim])
+        return NamedSharding(mesh, _sanitize(mesh, spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def named(mesh: Mesh, spec: P, shape) -> NamedSharding:
+    """Divisibility-sanitized NamedSharding for an explicit spec."""
+    spec = P(*spec[: len(shape)], *([None] * max(0, len(shape) - len(spec))))
+    return NamedSharding(mesh, _sanitize(mesh, spec, shape))
+
+
+def logits_spec(mesh: Mesh) -> P:
+    dp = dp_axes(mesh) or None
+    return P(dp, None, "model")
+
+
+# ---------------------------------------------------------------------------
+# in-graph activation constraints (no-ops when no mesh is active: CPU tests)
+# ---------------------------------------------------------------------------
+
+_ROLES = {
+    # role -> spec builder given (mesh, ndim)
+    "tokens_act": lambda dp: P(dp, None, None),
+    "logits": lambda dp: P(dp, None, "model"),
+    "moe_buffer": lambda dp: P("model", dp, None),
+    "moe_hidden": lambda dp: P("model", dp, None),
+    # local-dispatch MoE: (blocks, E, cap, d) — blocks over DP, experts over
+    # model; building this from block-local tokens is ONE all-to-all.
+    "moe_buffer_local": lambda dp: P(dp, "model", None, None),
+    "moe_hidden_local": lambda dp: P(dp, "model", None, None),
+    "moe_tokens_local": lambda dp: P(dp, None, None),
+}
+
+
+def _ambient_mesh() -> Mesh | None:
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:  # pragma: no cover
+        return None
+
+
+def maybe_constrain(x, role: str):
+    """with_sharding_constraint(x, role-spec) if a mesh is ambient.
+
+    Divisibility-sanitized like the parameter rules; silently a no-op in
+    single-device (test) runs so model code stays mesh-agnostic."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    dp = dp_axes(mesh) or None
+    spec = _ROLES[role](dp)
+    spec = P(*spec[: x.ndim], *([None] * max(0, x.ndim - len(spec))))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _sanitize(mesh, spec, x.shape))
+    )

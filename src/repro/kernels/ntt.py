@@ -1,0 +1,276 @@
+"""Row-centric NTT as Pallas TPU kernels.
+
+The PIM -> TPU mapping (DESIGN.md §2):
+
+  regime A (intra-atom + intra-row)  -> `_ntt_tile_kernel`: ALL stages with
+      stride < T fused over a single VMEM-resident tile; one HBM read +
+      one HBM write covers log(T) stages (the paper's "process a row-sized
+      block with one row activation").
+  regime B (inter-row)               -> `_ntt_pair_kernel`: one pass per
+      remaining stage; each grid step's block CONTAINS both butterfly
+      halves (u and v tiles), is updated IN PLACE
+      (`input_output_aliases`) — the paper's BU-grained scheduling +
+      in-place update, so no third buffer / no extra HBM allocation.
+      Pallas's grid pipeline multi-buffers HBM<->VMEM DMAs against
+      compute — the Nb-buffer pipelining idea; each HBM tile is touched
+      exactly once (read+write) per stage — the activation-grouping idea.
+  bank-level parallelism             -> the batch grid axis (FHE runs many
+      independent NTTs; see ops.ntt / shard_map batching).
+
+Twiddles are precomputed tables fed through VMEM and shared across the
+batch (changed assumption #1 in DESIGN.md: the paper's on-the-fly
+(w0, r_w) generation saves DRAM bandwidth; on TPU a serial recurrence
+would idle the VPU, and the tables cost O(T) VMEM).
+
+All arithmetic is uint32 with 16-bit-limb emulation of 32x32->64
+products (TPUs have no 64-bit integer multiply); q < 2^31.  Kernels run
+with interpret=True on CPU and compile for TPU through the same path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import modmath as mm
+from repro.core.ntt import NttContext, Stage, forward_stages, inverse_stages
+
+DEFAULT_TILE = 8192  # words: 32 KiB data/tile + 32 KiB twiddles << VMEM
+DEFAULT_BATCH_BLOCK = 8
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# stage micro-kernel — one butterfly stage over the last axis of (B, L)
+# ---------------------------------------------------------------------------
+
+
+def _stage_block(x, tw, tw_sh, stage: Stage, q: int):
+    b = x.shape[0]
+    n = x.shape[-1]
+    xr = x.reshape(b, stage.blocks, 2, stage.stride)
+    u = xr[:, :, 0, :]
+    v = xr[:, :, 1, :]
+    w = tw.reshape(1, stage.blocks, 1)
+    w_sh = tw_sh.reshape(1, stage.blocks, 1)
+    if stage.gs:
+        out0 = mm.addmod_u32(u, v, q)
+        out1 = mm.shoup_mulmod_u32(mm.submod_u32(u, v, q), w, w_sh, q)
+    else:
+        wv = mm.shoup_mulmod_u32(v, w, w_sh, q)
+        out0 = mm.addmod_u32(u, wv, q)
+        out1 = mm.submod_u32(u, wv, q)
+    return jnp.stack([out0, out1], axis=2).reshape(b, n)
+
+
+# ---------------------------------------------------------------------------
+# regime A kernel: fused stages over one VMEM tile
+# ---------------------------------------------------------------------------
+
+
+def _ntt_tile_kernel(x_ref, tw_ref, twsh_ref, o_ref, *, stages, q, scale):
+    x = x_ref[...]
+    if x.ndim == 3:  # (bb, 1, tile) block from the tiled path
+        x = x[:, 0, :]
+    tw_all = tw_ref[...].reshape(-1)
+    twsh_all = twsh_ref[...].reshape(-1)
+    for st in stages:
+        tw = jax.lax.slice(tw_all, (st.tw_lo,), (st.tw_lo + st.blocks,))
+        tw_sh = jax.lax.slice(twsh_all, (st.tw_lo,), (st.tw_lo + st.blocks,))
+        x = _stage_block(x, tw, tw_sh, st, q)
+    if scale is not None:
+        n_inv, n_inv_sh = scale
+        x = mm.shoup_mulmod_u32(x, np.uint32(n_inv), np.uint32(n_inv_sh), q)
+    o_ref[...] = x.reshape(o_ref.shape)
+
+
+def _pack_tile_stages(ctx: NttContext, n: int, tile: int, forward: bool):
+    """Per-tile packed twiddle tables + stage plans with packed offsets.
+
+    For tile j (global offset o = j*tile) the stage with stride t uses
+    table[h + o/(2t) : ... + tile/(2t)] (h = n/(2t)) — a contiguous slice,
+    so all of tile j's stage twiddles concatenate into row j of a
+    (n_tiles, tile) array; one BlockSpec row feeds the fused kernel.
+    """
+    table = ctx.psi_brv if forward else ctx.psi_inv_brv
+    table_sh = ctx.psi_brv_shoup if forward else ctx.psi_inv_brv_shoup
+    plan_full = forward_stages(n) if forward else inverse_stages(n)
+    stages = [st for st in plan_full if st.stride < tile]
+    n_tiles = n // tile
+    packed = np.zeros((n_tiles, tile), np.uint32)
+    packed_sh = np.zeros((n_tiles, tile), np.uint32)
+    local_stages = []
+    cursor = 0
+    for st in stages:
+        h = n // (2 * st.stride)
+        per_tile = tile // (2 * st.stride)
+        for j in range(n_tiles):
+            lo = h + (j * tile) // (2 * st.stride)
+            packed[j, cursor : cursor + per_tile] = table[lo : lo + per_tile]
+            packed_sh[j, cursor : cursor + per_tile] = table_sh[lo : lo + per_tile]
+        local_stages.append(Stage(blocks=per_tile, stride=st.stride, tw_lo=cursor, gs=st.gs))
+        cursor += per_tile
+    return packed, packed_sh, local_stages
+
+
+# ---------------------------------------------------------------------------
+# regime B kernel: one inter-tile stage, block contains both halves
+# ---------------------------------------------------------------------------
+
+
+def _ntt_pair_kernel(x_ref, tw_ref, twsh_ref, o_ref, *, gs, q):
+    # block shape (bb, 1, 2, 1, tile): dim 2 separates the butterfly halves
+    u = x_ref[:, 0, 0, 0, :]
+    v = x_ref[:, 0, 1, 0, :]
+    w = tw_ref[0]
+    w_sh = twsh_ref[0]
+    if gs:
+        nu = mm.addmod_u32(u, v, q)
+        nv = mm.shoup_mulmod_u32(mm.submod_u32(u, v, q), w, w_sh, q)
+    else:
+        wv = mm.shoup_mulmod_u32(v, w, w_sh, q)
+        nu = mm.addmod_u32(u, wv, q)
+        nv = mm.submod_u32(u, wv, q)
+    o_ref[:, 0, 0, 0, :] = nu
+    o_ref[:, 0, 1, 0, :] = nv
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ctx", "forward", "tile", "batch_block", "interpret")
+)
+def ntt_pallas(
+    x,
+    ctx: NttContext,
+    forward: bool = True,
+    tile: int | None = None,
+    batch_block: int | None = None,
+    interpret: bool | None = None,
+):
+    """Batched negacyclic NTT over the last axis of (batch, n) uint32.
+
+    forward: natural order in -> bit-reversed out (CT butterflies).
+    inverse: bit-reversed in -> natural out, scaled by 1/N (GS).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    n = ctx.n
+    assert x.shape[-1] == n, (x.shape, n)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    batch = x.shape[0]
+    tile = min(tile or DEFAULT_TILE, n)
+    bb = min(batch_block or DEFAULT_BATCH_BLOCK, batch)
+    pad = (-batch) % bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    scale = (ctx.n_inv, ctx.n_inv_shoup) if not forward else None
+
+    if tile >= n:
+        out = _fused_full(x, ctx, forward, bb, interpret, scale)
+    else:
+        out = _two_regime(x, ctx, forward, tile, bb, interpret, scale)
+    if pad:
+        out = out[: x.shape[0] - pad]
+    return out[0] if squeeze else out
+
+
+def _fused_full(x, ctx, forward, bb, interpret, scale):
+    """n <= tile: whole transform VMEM-resident (regime A only)."""
+    n = ctx.n
+    table = ctx.psi_brv if forward else ctx.psi_inv_brv
+    table_sh = ctx.psi_brv_shoup if forward else ctx.psi_inv_brv_shoup
+    plan = forward_stages(n) if forward else inverse_stages(n)
+    batch = x.shape[0]
+    kernel = functools.partial(_ntt_tile_kernel, stages=plan, q=ctx.q, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.uint32),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(x, jnp.asarray(table), jnp.asarray(table_sh))
+
+
+def _two_regime(x, ctx, forward, tile, bb, interpret, scale):
+    """n > tile: fused intra-tile pass + one in-place pass per inter stage."""
+    n = ctx.n
+    batch = x.shape[0]
+    n_tiles = n // tile
+    table = ctx.psi_brv if forward else ctx.psi_inv_brv
+    table_sh = ctx.psi_brv_shoup if forward else ctx.psi_inv_brv_shoup
+    plan_full = forward_stages(n) if forward else inverse_stages(n)
+    inter = [st for st in plan_full if st.stride >= tile]
+    packed, packed_sh, local_stages = _pack_tile_stages(ctx, n, tile, forward)
+
+    def run_intra(x):
+        kernel = functools.partial(_ntt_tile_kernel, stages=local_stages, q=ctx.q, scale=None)
+        xr = x.reshape(batch, n_tiles, tile)
+        out = pl.pallas_call(
+            kernel,
+            grid=(batch // bb, n_tiles),
+            in_specs=[
+                pl.BlockSpec((bb, 1, tile), lambda i, j: (i, j, 0)),
+                pl.BlockSpec((1, tile), lambda i, j: (j, 0)),
+                pl.BlockSpec((1, tile), lambda i, j: (j, 0)),
+            ],
+            out_specs=pl.BlockSpec((bb, 1, tile), lambda i, j: (i, j, 0)),
+            out_shape=jax.ShapeDtypeStruct(xr.shape, jnp.uint32),
+            input_output_aliases={0: 0},
+            interpret=interpret,
+        )(xr, jnp.asarray(packed), jnp.asarray(packed_sh))
+        return out.reshape(batch, n)
+
+    def run_inter_stage(x, st: Stage):
+        st_tiles = st.stride // tile
+        n_groups = n_tiles // (2 * st_tiles)
+        h = n // (2 * st.stride)
+        # twiddle depends only on the group index g: u-tile offset
+        # = (g*2*st_tiles + s)*tile, and (offset)/(2*stride) = g.
+        tw = np.asarray(table)[h : h + n_groups].astype(np.uint32)
+        tw_sh = np.asarray(table_sh)[h : h + n_groups].astype(np.uint32)
+        x5 = x.reshape(batch, n_groups, 2, st_tiles, tile)
+        kernel = functools.partial(_ntt_pair_kernel, gs=st.gs, q=ctx.q)
+        out = pl.pallas_call(
+            kernel,
+            grid=(batch // bb, n_groups, st_tiles),
+            in_specs=[
+                pl.BlockSpec((bb, 1, 2, 1, tile), lambda i, g, s: (i, g, 0, s, 0)),
+                pl.BlockSpec((1,), lambda i, g, s: (g,)),
+                pl.BlockSpec((1,), lambda i, g, s: (g,)),
+            ],
+            out_specs=pl.BlockSpec((bb, 1, 2, 1, tile), lambda i, g, s: (i, g, 0, s, 0)),
+            out_shape=jax.ShapeDtypeStruct(x5.shape, jnp.uint32),
+            input_output_aliases={0: 0},
+            interpret=interpret,
+        )(x5, jnp.asarray(tw), jnp.asarray(tw_sh))
+        return out.reshape(batch, n)
+
+    if forward:
+        for st in inter:  # large strides first
+            x = run_inter_stage(x, st)
+        x = run_intra(x)
+    else:
+        x = run_intra(x)
+        for st in inter:
+            x = run_inter_stage(x, st)
+    if scale is not None:
+        n_inv, n_inv_sh = scale
+        x = mm.shoup_mulmod_u32(x, np.uint32(n_inv), np.uint32(n_inv_sh), ctx.q)
+    return x

@@ -1,0 +1,83 @@
+import os
+
+if "--xla512" not in str(os.environ.get("_REPRO_PERF_MARK", "")):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration harness (§Perf): lower one cell with config overrides and
+report the three roofline terms, so a hypothesis -> change -> measure
+cycle is a single command.
+
+  python -m repro.launch.perf --arch qwen3-moe-30b-a3b --shape train_4k \
+      --set moe_dispatch=gather --set remat=False
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.configs.registry import effective_shape, get_config  # noqa: E402
+from repro.launch import dryrun  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import HBM_BW, LINK_BW, PEAK_FLOPS, model_flops  # noqa: E402
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def measure(arch: str, shape_name: str, overrides: dict, fullmem: bool = False) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = effective_shape(cfg, SHAPES[shape_name])
+    mesh = make_production_mesh()
+    ri = dryrun.extrapolated_costs(cfg, shape, mesh)
+    t_comp = ri["flops_per_device"] / PEAK_FLOPS
+    t_mem = ri["bytes_per_device"] / HBM_BW
+    t_coll = ri["collective_bytes_per_device"] / LINK_BW
+    bound = max(t_comp, t_mem, t_coll)
+    mf = model_flops(cfg, shape)
+    out = dict(
+        arch=arch,
+        shape=shape_name,
+        overrides=overrides,
+        compute_s=t_comp,
+        memory_s=t_mem,
+        collective_s=t_coll,
+        dominant=max([("compute", t_comp), ("memory", t_mem), ("collective", t_coll)],
+                     key=lambda kv: kv[1])[0],
+        useful_ratio=mf / (ri["flops_per_device"] * 256),
+        roofline_fraction=(mf / 256 / PEAK_FLOPS) / bound if bound else 0.0,
+        collective_by_op=ri["collective_by_op"],
+    )
+    if fullmem:
+        jitted, args = dryrun.build_lowerable(cfg, shape, mesh)
+        with mesh:
+            compiled = jitted.lower(*args).compile()
+        mem = compiled.memory_analysis()
+        out["peak_gib"] = getattr(mem, "peak_memory_in_bytes", 0) / 2**30
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[], dest="overrides")
+    ap.add_argument("--fullmem", action="store_true")
+    args = ap.parse_args()
+    overrides = dict(parse_override(kv) for kv in args.overrides)
+    out = measure(args.arch, args.shape, overrides, fullmem=args.fullmem)
+    print(json.dumps(out, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Regenerate the §Dry-run and §Roofline tables inside EXPERIMENTS.md from
+reports/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report_experiments
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch import roofline
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+REPORT_DIR = os.path.join(ROOT, "reports", "dryrun")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def dryrun_table() -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(REPORT_DIR, "*.json"))):
+        r = json.load(open(path))
+        mem = r.get("memory", {})
+        coll = r.get("collectives", {})
+        status = r["status"]
+        if status == "run":
+            status = "OK"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {status[:60]} | "
+            f"{mem.get('peak_bytes', 0) / 2**30:.2f} | "
+            f"{r.get('flops_per_device', 0):.2e} | "
+            f"{coll.get('total_bytes', 0):.2e} | "
+            f"{','.join(sorted((coll.get('counts') or {}).keys())) or '—'} |"
+        )
+    hdr = ("| arch | shape | mesh | status | peak GiB/dev | flops/dev (scanned) | "
+           "coll B/dev (scanned) | collective kinds |\n|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def inject(md: str, marker: str, content: str) -> str:
+    tag = f"<!-- {marker} -->"
+    assert tag in md, marker
+    return md.replace(tag, tag + "\n\n" + content)
+
+
+def main():
+    md = open(EXP).read()
+    # remove previously injected content (regenerate idempotently) by
+    # resetting to the section markers if present
+    rows = roofline.load_all(REPORT_DIR, "pod16x16")
+    roof = roofline.to_markdown(rows)
+    md = inject(md, "DRYRUN_TABLE", dryrun_table())
+    md = inject(md, "ROOFLINE_TABLE", roof)
+    open(EXP, "w").write(md)
+    print("EXPERIMENTS.md updated:",
+          len(glob.glob(os.path.join(REPORT_DIR, "*.json"))), "cells")
+
+
+if __name__ == "__main__":
+    main()

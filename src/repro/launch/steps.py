@@ -1,0 +1,118 @@
+"""Step functions (pure, jit-able) + their abstract input specs.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation — the
+contract the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.optim import OptConfig, make_optimizer
+
+S = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig):
+    _, update = make_optimizer(opt_cfg)
+
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = jax.value_and_grad(T.loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
+        new_params, new_opt, opt_metrics = update(grads, opt_state, params, step)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_opt_init(cfg: ModelConfig, opt_cfg: OptConfig):
+    init, _ = make_optimizer(opt_cfg)
+    return init
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, batch, cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, caches, pos):
+        return T.decode_step(params, cfg, token, caches, pos)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.max_target_len:
+        s = min(s, cfg.max_target_len)
+    out = {"tokens": S((b, s), jnp.int32)}
+    if cfg.num_image_tokens:
+        out["image_embeds"] = S((b, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    if cfg.encoder_layers:
+        out["frames"] = S((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return out
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(T.init_params, cfg), jax.random.PRNGKey(0))
+
+
+def opt_specs(cfg: ModelConfig, opt_cfg: OptConfig):
+    init = make_opt_init(cfg, opt_cfg)
+    return jax.eval_shape(init, param_specs(cfg))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    enc_len = cfg.encoder_seq or cfg.num_image_tokens or 0
+    return jax.eval_shape(
+        functools.partial(T.init_cache, cfg, batch, cache_len, enc_len)
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, opt_cfg: OptConfig | None = None) -> dict:
+    """All abstract inputs for the step implied by shape.kind."""
+    opt_cfg = opt_cfg or OptConfig()
+    if shape.kind == "train":
+        return {
+            "params": param_specs(cfg),
+            "opt_state": opt_specs(cfg, opt_cfg),
+            "batch": batch_specs(cfg, shape),
+            "step": S((), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return {"params": param_specs(cfg), "batch": batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        b = shape.global_batch
+        s = min(shape.seq_len, cfg.max_target_len) if cfg.max_target_len else shape.seq_len
+        return {
+            "params": param_specs(cfg),
+            "token": S((b,), jnp.int32),
+            "caches": cache_specs(cfg, b, s),
+            "pos": S((), jnp.int32),
+        }
+    raise ValueError(shape.kind)

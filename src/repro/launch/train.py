@@ -1,0 +1,183 @@
+"""Fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Production behaviours demonstrated end-to-end (and exercised by
+tests/test_train_loop.py):
+  * auto-resume from the latest complete checkpoint (restart-safe data
+    pipeline replays the exact stream position);
+  * per-step failure handling: a failed step (device error, NaN loss,
+    injected fault) rolls back to the last checkpoint and retries with
+    the same data — bounded by --max-retries;
+  * straggler mitigation: a per-step deadline; steps exceeding it are
+    logged and counted (on real multi-host deployments the launcher
+    escalates to pod eviction / spare-pod swap — see DESIGN.md §5);
+  * elastic re-mesh: checkpoints are logical arrays, so a restart under
+    a different device count just re-shards on load (exercised by the
+    test restoring a 2-device run into a 1-device mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs.registry import get_config
+from repro.data.pipeline import SyntheticStream
+from repro.distributed import sharding as shd
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.optim import OptConfig
+
+
+class FaultInjector:
+    """Deterministically fails chosen steps (for tests / demos)."""
+
+    def __init__(self, fail_steps=(), exc=RuntimeError):
+        self.fail_steps = set(fail_steps)
+        self.exc = exc
+        self.fired = set()
+
+    def check(self, step: int):
+        if step in self.fail_steps and step not in self.fired:
+            self.fired.add(step)
+            raise self.exc(f"injected fault at step {step}")
+
+
+def train(
+    arch,
+    steps: int,
+    batch: int,
+    seq: int,
+    ckpt_dir: str,
+    reduced: bool = True,
+    ckpt_every: int = 20,
+    max_retries: int = 3,
+    step_deadline_s: float = 120.0,
+    seed: int = 0,
+    injector: FaultInjector | None = None,
+    mesh=None,
+    log_every: int = 10,
+):
+    """arch: registry name or a ModelConfig instance (custom models)."""
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    if reduced and isinstance(arch, str):
+        cfg = cfg.reduced()
+    opt_cfg = OptConfig(total_steps=steps, warmup_steps=max(1, steps // 20))
+    mesh = mesh or make_host_mesh()
+    stream = SyntheticStream(cfg, batch, seq, seed=seed)
+    mgr = CheckpointManager(ckpt_dir)
+    injector = injector or FaultInjector()
+
+    # -- build + shard initial state ---------------------------------------
+    param_shape = steps_lib.param_specs(cfg)
+    opt_shape = steps_lib.opt_specs(cfg, opt_cfg)
+    p_sh = shd.param_shardings(mesh, param_shape)
+    o_sh = shd.opt_shardings(mesh, opt_shape)
+
+    train_step = steps_lib.make_train_step(cfg, opt_cfg)
+    jit_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    start_step = 0
+    latest = mgr.latest_step()
+    if latest is not None:
+        (params, opt_state), _ = mgr.restore(
+            latest, (param_shape, opt_shape), (p_sh, o_sh)
+        )
+        start_step = latest
+        print(f"[train] resumed from checkpoint step {latest}")
+    else:
+        with mesh:
+            params = jax.jit(
+                lambda k: T.init_params(cfg, k), out_shardings=p_sh
+            )(jax.random.PRNGKey(seed))
+            init_opt = steps_lib.make_opt_init(cfg, opt_cfg)
+            opt_state = jax.jit(init_opt, out_shardings=o_sh)(params)
+        mgr.save(0, (params, opt_state))
+
+    # -- loop ----------------------------------------------------------------
+    history = []
+    stragglers = 0
+    step = start_step
+    retries = 0
+    while step < steps:
+        batch_np = stream.batch_at(step)
+        t0 = time.time()
+        try:
+            injector.check(step)
+            with mesh:
+                params, opt_state, metrics = jit_step(
+                    params, opt_state, batch_np, jnp.int32(step)
+                )
+            loss = float(metrics["loss"])
+            if not np.isfinite(loss):
+                raise FloatingPointError(f"non-finite loss at step {step}")
+        except Exception as e:  # noqa: BLE001 — rollback + retry
+            retries += 1
+            if retries > max_retries:
+                raise RuntimeError(f"step {step}: exceeded max retries") from e
+            latest = mgr.latest_step()
+            print(f"[train] step {step} failed ({e}); rolling back to ckpt {latest} "
+                  f"(retry {retries}/{max_retries})")
+            (params, opt_state), _ = mgr.restore(
+                latest, (param_shape, opt_shape), (p_sh, o_sh)
+            )
+            step = latest
+            continue
+        dt = time.time() - t0
+        if dt > step_deadline_s:
+            stragglers += 1
+            print(f"[train] step {step} exceeded deadline ({dt:.1f}s) — straggler logged")
+        retries = 0
+        if step % log_every == 0:
+            print(f"[train] step {step} loss {loss:.4f} lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} ({dt:.2f}s)")
+        history.append({"step": step, "loss": loss, "time_s": dt})
+        step += 1
+        if step % ckpt_every == 0 or step == steps:
+            mgr.save(step, (params, opt_state), blocking=False)
+    mgr.wait()
+    summary = {
+        "arch": cfg.name,
+        "steps": steps,
+        "final_loss": history[-1]["loss"] if history else None,
+        "first_loss": history[0]["loss"] if history else None,
+        "stragglers": stragglers,
+    }
+    print("[train] done:", json.dumps(summary))
+    return params, opt_state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--full", action="store_true", help="full (paper) config")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--inject-failure", type=int, default=None)
+    args = ap.parse_args()
+    injector = FaultInjector([args.inject_failure]) if args.inject_failure else None
+    train(
+        args.arch,
+        args.steps,
+        args.batch,
+        args.seq,
+        args.ckpt_dir,
+        reduced=not args.full,
+        ckpt_every=args.ckpt_every,
+        injector=injector,
+    )
+
+
+if __name__ == "__main__":
+    main()

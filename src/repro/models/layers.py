@@ -1,0 +1,325 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention, SwiGLU, MoE.
+
+Pure JAX, param pytrees are plain dicts.  Compute runs in bf16 (params
+are cast at use), reductions in fp32.  All functions are batch-agnostic
+over leading dims of `x` (B, S, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _he(key, shape, fan_in):
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d):
+    return jnp.ones((d,), jnp.float32)
+
+
+def rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale).astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta):
+    """x: (..., S, H, hd), positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (self / cross), optional qk-norm
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _he(ks[0], (d, h * hd), d),
+        "wk": _he(ks[1], (d, kv * hd), d),
+        "wv": _he(ks[2], (d, kv * hd), d),
+        "wo": _he(ks[3], (h * hd, d), h * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, xq, xkv):
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = (xq @ p["wq"].astype(COMPUTE_DTYPE)).reshape(*xq.shape[:-1], h, hd)
+    k = (xkv @ p["wk"].astype(COMPUTE_DTYPE)).reshape(*xkv.shape[:-1], kv, hd)
+    v = (xkv @ p["wv"].astype(COMPUTE_DTYPE)).reshape(*xkv.shape[:-1], kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(q, k, v, cfg: ModelConfig, causal: bool, q_offset=0):
+    """q: (B,Sq,H,hd) k,v: (B,Sk,KV,hd).  GQA: H = KV * rep."""
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, sq, kvh, rep, hd)
+    scores = jnp.einsum("bqgrh,bkgh->bgrqk", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd).astype(np.float32)
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        mask = qpos >= kpos
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def attention(p, cfg: ModelConfig, x, positions, causal=True, kv=None, kv_positions=None):
+    """Self (kv=None) or cross attention.  Returns (B, S, D)."""
+    xkv = kv if kv is not None else x
+    q, k, v = _project_qkv(p, cfg, x, xkv)
+    if kv is None:  # self-attn: rotary on both
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    out = _sdpa(q, k, v, cfg, causal=causal and kv is None)
+    return out.reshape(*x.shape[:-1], -1) @ p["wo"].astype(COMPUTE_DTYPE)
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos):
+    """One-token decode: x (B, 1, D), cache (B, L, KV, hd), pos scalar.
+
+    Returns (out, new_k, new_v) with the caches updated in place at pos.
+    """
+    q, k, v = _project_qkv(p, cfg, x, x)
+    positions = jnp.full((x.shape[0], 1), pos)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    b, _, h, hd = q.shape
+    kvh = cache_k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, kvh, rep, hd)
+    scores = jnp.einsum("bgrh,bkgh->bgrk", qg, cache_k.astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    scores = scores / np.sqrt(hd).astype(np.float32)
+    valid = jnp.arange(cache_k.shape[1])[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bgrk,bkgh->bgrh", probs, cache_v.astype(COMPUTE_DTYPE))
+    out = out.reshape(b, 1, h * hd) @ p["wo"].astype(COMPUTE_DTYPE)
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": _he(ks[0], (d, f), d),
+        "wg": _he(ks[1], (d, f), d),
+        "wo": _he(ks[2], (f, d), f),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["wg"].astype(COMPUTE_DTYPE)) * (x @ p["wi"].astype(COMPUTE_DTYPE))
+    return h @ p["wo"].astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k routing, sort-based capacity dispatch (EP-shardable)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _he(ks[0], (d, e), d),
+        "wi": _he(ks[1], (e, d, f), d),
+        "wg": _he(ks[2], (e, d, f), d),
+        "wo": _he(ks[3], (e, f, d), f),
+    }
+
+
+def moe_local(p, cfg: ModelConfig, x, n_blocks: int | None = None):
+    """Token-local MoE dispatch (§Perf 'local'): route within DP blocks.
+
+    The global-sort dispatch gathers across the full token axis with
+    replicated indices, which SPMD lowers into full-tensor all-reduces
+    (measured 23 TB/device/step on qwen3-moe train_4k).  Here tokens are
+    split into `n_blocks` blocks (sharded over DP); every sort/gather is
+    block-local, so the only cross-device traffic is resharding the
+    (blocks, E, cap, d) buffer from block-major to expert-major — a
+    single all-to-all.  Capacity is per (block, expert), i.e. slightly
+    stricter load-balance pressure than global capacity (standard for EP
+    systems).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    nb = n_blocks or min(32, b)  # dp-granularity blocks
+    while t % nb:
+        nb //= 2
+    tl = t // nb
+    cap = int(np.ceil(tl * k / e * cfg.capacity_factor))
+    xt = x.reshape(nb, tl, d)
+    xt = sharding.maybe_constrain(xt, "moe_tokens_local")
+
+    logits = jnp.einsum("btd,de->bte", xt, p["router"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # (nb, tl, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    density = jnp.mean(jax.nn.one_hot(top_e[..., 0], e), axis=(0, 1))
+    aux = jnp.sum(density * jnp.mean(probs, axis=(0, 1))) * e
+
+    flat_e = top_e.reshape(nb, tl * k)
+    order = jnp.argsort(flat_e, axis=-1)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    seg_start = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_e)
+    seg_end = jnp.concatenate([seg_start[:, 1:], jnp.full((nb, 1), tl * k)], axis=1)
+    pos_in_e = jnp.arange(tl * k)[None] - jnp.take_along_axis(seg_start, sorted_e, axis=-1)
+    keep = pos_in_e < cap
+    tok_of = order // k
+
+    # dispatch: compose indices in int space -> ONE d-wide gather
+    gidx = seg_start[:, :, None] + jnp.arange(cap)[None, None, :]  # (nb, e, cap)
+    valid = gidx < seg_end[:, :, None]
+    gidx = jnp.minimum(gidx, tl * k - 1).reshape(nb, e * cap)
+    comp_idx = jnp.take_along_axis(tok_of, gidx, axis=1)  # slot -> source token
+    buf = jnp.take_along_axis(xt.astype(COMPUTE_DTYPE), comp_idx[..., None], axis=1)
+    buf = jnp.where(valid.reshape(nb, e * cap, 1), buf, 0).reshape(nb, e, cap, d)
+    buf = sharding.maybe_constrain(buf, "moe_buffer_local")  # <- the all-to-all
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["wg"].astype(COMPUTE_DTYPE)))
+    h = h * jnp.einsum("becd,edf->becf", buf, p["wi"].astype(COMPUTE_DTYPE))
+    h = sharding.maybe_constrain(h, "moe_hidden_local")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"].astype(COMPUTE_DTYPE))
+    out_buf = sharding.maybe_constrain(out_buf, "moe_buffer_local")
+
+    # combine: token-major slot ids (int gathers) -> ONE d-wide gather;
+    # top_w is already token-major, so no weight permutation either.
+    flat_out = out_buf.reshape(nb, e * cap, d)
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, 0)  # (nb, tl*k) sorted-major
+    inv_order = jnp.argsort(order, axis=-1)
+    slot_tm = jnp.take_along_axis(slot, inv_order, axis=-1)
+    keep_tm = jnp.take_along_axis(keep, inv_order, axis=-1)
+    gathered = jnp.take_along_axis(flat_out, slot_tm[..., None], axis=1)
+    gathered = jnp.where(keep_tm[..., None], gathered, 0)
+    w_tm = top_w.reshape(nb, tl * k).astype(COMPUTE_DTYPE)
+    out = (gathered * w_tm[..., None]).reshape(nb, tl, k, d).sum(axis=2)
+    return out.reshape(b, s, d), aux
+
+
+def moe(p, cfg: ModelConfig, x):
+    """x: (B, S, D) -> (B, S, D), plus aux load-balancing loss.
+
+    Sort-based dispatch with per-expert capacity C = k*T/E * cap_factor:
+    assignments are sorted by expert id, each expert takes its first C
+    tokens (standard dropping MoE).  The (E, C, D) buffer is the tensor
+    sharded over the expert-parallel axis.
+
+    Two dispatch lowerings (cfg.moe_dispatch):
+      "scatter" — baseline: scatter into the expert buffer, scatter-add
+          the combine.  SPMD lowers scatters into sharded operands as
+          all-reduces over the FULL buffer (measured 15.7 TB/device/step
+          on jamba train_4k — see EXPERIMENTS.md §Perf).
+      "gather"  — dispatch via per-expert segment gathers and combine via
+          the inverse permutation + reshape-sum: no scatter anywhere, so
+          the partitioner emits all-to-all-style resharding instead of
+          buffer-wide all-reduces.
+    """
+    if cfg.moe_dispatch == "local":
+        return moe_local(p, cfg, x)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    cap = int(np.ceil(t * k / e * cfg.capacity_factor))
+    xt = x.reshape(t, d)
+
+    logits = (xt @ p["router"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # aux loss (Switch-style load balancing)
+    density = jnp.mean(jax.nn.one_hot(top_e[:, 0], e), axis=0)
+    density_prob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_prob) * e
+
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_e)  # stable
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e))  # first slot per expert
+    pos_in_e = jnp.arange(t * k) - seg_start[sorted_e]
+    keep = pos_in_e < cap
+    tok_of = order // k  # token index per sorted assignment
+
+    if cfg.moe_dispatch == "gather":
+        sorted_tok = xt[tok_of].astype(COMPUTE_DTYPE)  # (T*k, d)
+        seg_end = jnp.concatenate([seg_start[1:], jnp.array([t * k])])
+        gidx = seg_start[:, None] + jnp.arange(cap)[None, :]  # (e, cap)
+        valid = gidx < seg_end[:, None]
+        gidx = jnp.minimum(gidx, t * k - 1)
+        buf = jnp.where(valid[..., None], sorted_tok[gidx], 0)
+    else:  # scatter baseline
+        dest = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), COMPUTE_DTYPE)
+        buf = buf.at[dest].set(xt[tok_of].astype(COMPUTE_DTYPE), mode="drop")
+        buf = buf[: e * cap].reshape(e, cap, d)
+    buf = sharding.maybe_constrain(buf, "moe_buffer")  # EP: experts->model
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(COMPUTE_DTYPE)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(COMPUTE_DTYPE))
+    h = sharding.maybe_constrain(h, "moe_hidden")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(COMPUTE_DTYPE))
+    out_buf = sharding.maybe_constrain(out_buf, "moe_buffer")
+
+    flat_out = out_buf.reshape(e * cap, d)
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, 0)
+    gathered = jnp.where(keep[:, None], flat_out[slot], 0.0)  # (T*k, d) sorted
+    w_sorted = top_w.reshape(-1)[order].astype(COMPUTE_DTYPE)
+    contrib = gathered * w_sorted[:, None]
+    if cfg.moe_dispatch == "gather":
+        inv_order = jnp.argsort(order)  # combine = inverse perm + reshape-sum
+        out = contrib[inv_order].reshape(t, k, d).sum(axis=1)
+    else:
+        out = jnp.zeros((t, d), COMPUTE_DTYPE).at[tok_of].add(contrib)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,274 @@
+"""Mamba2 / SSD (state-space duality) blocks, chunked-scan training form
+and O(1)-state decode form.  Follows the minimal-SSD formulation of
+Mamba2 (arXiv:2405.21060): per chunk a dense (L x L) decay-masked
+attention-like product, plus an inter-chunk state recurrence.
+
+Shapes: x (B, S, H, P) heads x head_dim, B/C (B, S, G, N) groups x state,
+dt (B, S, H), A (H,) negative decay rates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, _he, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum_decay(a_cs):
+    """L[i, j] = exp(a_cs[i] - a_cs[j]) for i >= j else 0.  a_cs: (..., L)."""
+    li = a_cs[..., :, None]
+    lj = a_cs[..., None, :]
+    mask = jnp.tril(jnp.ones((a_cs.shape[-1],) * 2, bool))
+    return jnp.where(mask, jnp.exp(li - lj), 0.0)
+
+
+def ssd_chunked_grouped(xb, dA, Bg, Cg, chunk: int, init_state=None):
+    """Group-factored chunked SSD (§Perf 'grouped' impl).
+
+    xb: (B,S,H,P); dA: (B,S,H); Bg/Cg: (B,S,G,N) kept at GROUP rank.
+    vs the baseline: (i) B/C are never repeated to per-head rank — the
+    C·B^T score matrices are computed ONCE PER GROUP and shared by the
+    H/G heads of the group (identical by construction), cutting both the
+    dominant einsum flops and the (B,S,H,N) HBM traffic by H/G; (ii) the
+    decay mask is exponentiated in bf16.
+    """
+    b, s, h, p = xb.shape
+    g = Bg.shape[2]
+    n = Bg.shape[-1]
+    hh = h // g
+    nc = s // chunk
+    xc = xb.reshape(b, nc, chunk, g, hh, p)
+    dAc = dA.reshape(b, nc, chunk, g, hh).astype(jnp.float32)
+    Bc = Bg.reshape(b, nc, chunk, g, n)
+    Cc = Cg.reshape(b, nc, chunk, g, n)
+
+    a_cs = jnp.cumsum(dAc, axis=2)  # (b,c,l,g,hh)
+    a_total = a_cs[:, :, -1]  # (b,c,g,hh)
+
+    # per-group scores shared by the group's heads
+    scores = jnp.einsum("bclgn,bcsgn->bcgls", Cc, Bc)  # (b,c,g,l,s)
+    a_sw = jnp.moveaxis(a_cs, 2, -1)  # (b,c,g,hh,l)
+    L = _segsum_decay(a_sw).astype(COMPUTE_DTYPE)  # (b,c,g,hh,l,s)
+    y_diag = jnp.einsum("bcgls,bcghls,bcsghp->bclghp", scores, L, xc)
+
+    decay_to_end = jnp.exp(a_total[:, :, None] - a_cs).astype(COMPUTE_DTYPE)  # (b,c,l,g,hh)
+    chunk_states = jnp.einsum("bclgn,bclgh,bclghp->bcghpn", Bc, decay_to_end, xc)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, g, hh, p, n), COMPUTE_DTYPE)
+    elif init_state.ndim == 4:  # (b,h,p,n) cache layout
+        init_state = init_state.reshape(b, g, hh, p, n)
+
+    def step(state, inp):
+        s_c, a_tot = inp
+        new = state * jnp.exp(a_tot)[..., None, None].astype(COMPUTE_DTYPE) + s_c
+        return new, state
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init_state,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(a_total, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,c,g,hh,p,n)
+    state_decay = jnp.exp(a_cs).astype(COMPUTE_DTYPE)  # (b,c,l,g,hh)
+    y_off = jnp.einsum("bclgn,bcghpn,bclgh->bclghp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state.reshape(b, h, p, n)
+
+
+def ssd_chunked(xb, dA, Bh, Ch, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xb: (B,S,H,P) dt-scaled inputs; dA: (B,S,H); Bh/Ch: (B,S,H,N)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = xb.shape
+    n = Bh.shape[-1]
+    nc = s // chunk
+    xc = xb.reshape(b, nc, chunk, h, p)
+    dAc = dA.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = Bh.reshape(b, nc, chunk, h, n)
+    Cc = Ch.reshape(b, nc, chunk, h, n)
+
+    a_cs = jnp.cumsum(dAc, axis=2)  # inclusive (b,c,l,h)
+    a_total = a_cs[:, :, -1, :]  # (b,c,h)
+
+    # intra-chunk ("diagonal") term
+    L = _segsum_decay(jnp.moveaxis(a_cs, -1, -2))  # (b,c,h,l,l)
+    Ldt = L.astype(COMPUTE_DTYPE)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)  # (b,c,h,l,s)
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp", scores, Ldt, xc)
+
+    # per-chunk end states
+    decay_to_end = jnp.exp(a_total[:, :, None, :] - a_cs).astype(COMPUTE_DTYPE)  # (b,c,l,h)
+    chunk_states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bc, decay_to_end, xc)
+
+    # inter-chunk recurrence (scan over chunks)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), COMPUTE_DTYPE)
+
+    def step(state, inp):
+        s_c, a_tot = inp  # (b,h,p,n), (b,h)
+        prev = state
+        new = prev * jnp.exp(a_tot)[:, :, None, None].astype(COMPUTE_DTYPE) + s_c
+        return new, prev  # emit the state *entering* this chunk
+
+    a_tot_sw = jnp.moveaxis(a_total, 1, 0)  # (c,b,h)
+    cs_sw = jnp.moveaxis(chunk_states, 1, 0)  # (c,b,h,p,n)
+    final_state, prev_states = jax.lax.scan(step, init_state, (cs_sw, a_tot_sw))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,c,h,p,n)
+
+    # off-diagonal (carried state) term
+    state_decay = jnp.exp(a_cs).astype(COMPUTE_DTYPE)  # decay from chunk start
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssd_decode_step(state, x_t, dA_t, B_t, C_t):
+    """One-token SSD update.  state (B,H,P,N); x_t (B,H,P); dA_t (B,H);
+    B_t/C_t (B,H,N).  Returns (y_t (B,H,P), new_state)."""
+    decay = jnp.exp(dA_t.astype(jnp.float32))[:, :, None, None].astype(COMPUTE_DTYPE)
+    outer = x_t[..., :, None] * B_t[..., None, :]  # (B,H,P,N)
+    new_state = state * decay + outer
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, C_t)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 mixer block
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    g, n, w = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv_width
+    xbc = di + 2 * g * n
+    proj = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _he(ks[0], (d, proj), d),
+        "conv_w": _he(ks[1], (w, xbc), w),
+        "conv_b": jnp.zeros((xbc,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "skip_d": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(di),
+        "out_proj": _he(ks[2], (di, d), di),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * g * n]
+    dt = proj[..., 2 * di + 2 * g * n :]
+    return z, xbc, dt
+
+
+def _split_xbc(cfg: ModelConfig, xbc):
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    x = xbc[..., :di]
+    B = xbc[..., di : di + g * n]
+    C = xbc[..., di + g * n :]
+    return x, B, C
+
+
+def _causal_conv(xbc, conv_w, conv_b, history=None):
+    """Depthwise causal conv over time; xbc (B, S, Cdim), conv_w (W, Cdim).
+
+    history: (B, W-1, Cdim) left context (decode/prefill continuity)."""
+    w = conv_w.shape[0]
+    if history is None:
+        history = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[-1]), xbc.dtype)
+    xp = jnp.concatenate([history, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * conv_w[i].astype(xbc.dtype) for i in range(w)
+    )
+    return out + conv_b.astype(xbc.dtype), xp[:, -(w - 1) :, :]
+
+
+def _expand_groups(cfg: ModelConfig, bc):
+    """(B, S, G*N) -> per-head (B, S, H, N) by repeating groups."""
+    b, s = bc.shape[:2]
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    bc = bc.reshape(b, s, g, n)
+    return jnp.repeat(bc, h // g, axis=2)
+
+
+def mamba_forward(p, cfg: ModelConfig, x, init_state=None, conv_history=None):
+    """Full-sequence mixer.  x: (B, S, D) bf16.  Returns (y, (conv_hist, state)).
+
+    Sequences are padded (at the end) to a chunk multiple; padded steps
+    have dt forced to 0, so they neither decay nor feed the state — the
+    returned state is exactly the post-last-real-token state.
+    """
+    b, s, d = x.shape
+    h_heads, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"].astype(COMPUTE_DTYPE)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_hist = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_history)
+    xbc = jax.nn.silu(xbc)
+    xi, B, C = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 -> identity step
+        xi = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    A = -jnp.exp(p["a_log"])  # (H,)
+    dA = dt * A  # (B,Sp,H)
+    xh = xi.reshape(b, sp, h_heads, hp)
+    xb = xh * dt[..., None].astype(COMPUTE_DTYPE)
+    if cfg.ssm_impl == "grouped":
+        g, n = cfg.ssm_groups, cfg.ssm_state
+        y, state = ssd_chunked_grouped(
+            xb, dA, B.reshape(b, sp, g, n), C.reshape(b, sp, g, n),
+            cfg.ssm_chunk, init_state,
+        )
+    else:
+        Bh = _expand_groups(cfg, B)
+        Ch = _expand_groups(cfg, C)
+        y, state = ssd_chunked(xb, dA, Bh, Ch, cfg.ssm_chunk, init_state)
+    y = y[:, :s]
+    xh = xh[:, :s]
+    y = y + xh * p["skip_d"][None, None, :, None].astype(COMPUTE_DTYPE)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(COMPUTE_DTYPE), (conv_hist, state)
+
+
+def mamba_decode(p, cfg: ModelConfig, x, conv_history, state):
+    """One-token mixer.  x (B, 1, D).  Returns (y, (conv_hist, state))."""
+    b = x.shape[0]
+    h_heads, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ p["in_proj"].astype(COMPUTE_DTYPE)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_hist = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_history)
+    xbc = jax.nn.silu(xbc)
+    xi, B, C = _split_xbc(cfg, xbc)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["a_log"])
+    dA = dt * A  # (B,H)
+    xh = xi.reshape(b, h_heads, hp)
+    xb = xh * dt[..., None].astype(COMPUTE_DTYPE)
+    Bh = _expand_groups(cfg, B)[:, 0]  # (B,H,N)
+    Ch = _expand_groups(cfg, C)[:, 0]
+    y, state = ssd_decode_step(state, xb, dA, Bh, Ch)
+    y = y + xh * p["skip_d"][None, :, None].astype(COMPUTE_DTYPE)
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(COMPUTE_DTYPE), (conv_hist, state)

@@ -1,0 +1,404 @@
+"""Pattern-scanned decoder LM covering all assigned families.
+
+The model is a scan over `cfg.reps` repetitions of `cfg.pattern()`; every
+pattern position has its own stacked parameter pytree (leading dim =
+reps), so the compiled graph contains exactly one pattern body — the
+compile-time trick that makes 61-72-layer trillion-param configs
+lowerable on the CPU dry-run host and fast to compile in production.
+
+Entry points:
+  init_params(cfg, key)                      parameter pytree
+  forward(params, cfg, batch)                full-seq logits + aux (train)
+  prefill(params, cfg, batch, cache_len)     logits at last pos + caches
+  decode_step(params, cfg, token, caches, pos)  one-token serve step
+  encoder_forward(params, cfg, frames)       whisper encoder (conv stub in)
+
+Caches are pytrees aligned with the scanned params: leading dim = reps.
+  attn  : {"k": (reps,B,L,KV,hd), "v": ...}
+  mamba : {"conv": (reps,B,W-1,xbc), "state": (reps,B,H,P,N)}
+  cross : {"k": (reps,B,S_enc,KV,hd), "v": ...}  (precomputed at prefill)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding
+from repro.models import layers as L
+from repro.models import ssm
+
+COMPUTE_DTYPE = L.COMPUTE_DTYPE
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig, mixer: str, ffn: str):
+    ks = jax.random.split(key, 6)
+    p = {"ln1": L.rmsnorm_init(cfg.d_model)}
+    if mixer in ("attn", "attn_nc", "cross"):
+        p["mixer"] = L.attn_init(ks[0], cfg)
+    elif mixer == "attn_cross":
+        p["mixer"] = L.attn_init(ks[0], cfg)
+        p["ln_cross"] = L.rmsnorm_init(cfg.d_model)
+        p["cross"] = L.attn_init(ks[1], cfg)
+    elif mixer == "mamba":
+        p["mixer"] = ssm.mamba_init(ks[0], cfg)
+    else:  # pragma: no cover
+        raise ValueError(mixer)
+    if ffn == "mlp":
+        p["ln2"] = L.rmsnorm_init(cfg.d_model)
+        p["ffn"] = L.mlp_init(ks[2], cfg)
+    elif ffn == "moe":
+        p["ln2"] = L.rmsnorm_init(cfg.d_model)
+        p["ffn"] = L.moe_init(ks[3], cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    pattern = cfg.pattern()
+    keys = jax.random.split(key, len(pattern) + 4)
+    params = {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(
+            jnp.float32
+        ),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "blocks": [],
+    }
+    for i, (mixer, ffn) in enumerate(pattern):
+        stack = jax.vmap(lambda k, m=mixer, f=ffn: _block_init(k, cfg, m, f))(
+            jax.random.split(keys[i], cfg.reps)
+        )
+        params["blocks"].append(stack)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._he(keys[-2], (cfg.d_model, cfg.vocab_size), cfg.d_model)
+    if cfg.encoder_layers:  # whisper-style encoder over precomputed frames
+        enc_keys = jax.random.split(keys[-3], 2)
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: _block_init(k, cfg, "attn_nc", "mlp"))(
+                jax.random.split(enc_keys[0], cfg.encoder_layers)
+            ),
+            "final_norm": L.rmsnorm_init(cfg.d_model),
+        }
+    if cfg.param_dtype != "float32":
+        dt = jnp.dtype(cfg.param_dtype)
+        params = jax.tree.map(lambda x: x.astype(dt), params)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(cfg, mixer, ffn, p, x, positions, enc_out, causal=True):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    aux = jnp.float32(0)
+    if mixer in ("attn", "attn_nc"):
+        out = L.attention(p["mixer"], cfg, h, positions, causal=mixer == "attn")
+    elif mixer == "cross":
+        out = L.attention(p["mixer"], cfg, h, positions, kv=enc_out)
+    elif mixer == "attn_cross":
+        out = L.attention(p["mixer"], cfg, h, positions, causal=True)
+        x = x + out
+        h2 = L.rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        out = L.attention(p["cross"], cfg, h2, positions, kv=enc_out)
+    elif mixer == "mamba":
+        out, _ = ssm.mamba_forward(p["mixer"], cfg, h)
+    else:  # pragma: no cover
+        raise ValueError(mixer)
+    x = x + out
+    if ffn != "none":
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if ffn == "moe":
+            out, aux = L.moe(p["ffn"], cfg, h)
+        else:
+            out = L.mlp(p["ffn"], h)
+        x = x + out
+    return x, aux
+
+
+def _rep_slice(blocks, r):
+    """Per-rep parameter slices from the stacked block pytrees."""
+    return tuple(jax.tree.map(lambda x: x[r], stack) for stack in blocks)
+
+
+def _scan_blocks(cfg: ModelConfig, params, x, positions, enc_out):
+    pattern = cfg.pattern()
+
+    def body(carry, p_slices):
+        h, aux = carry
+        h = sharding.maybe_constrain(h, "tokens_act")  # batch stays on DP
+        for i, (mixer, ffn) in enumerate(pattern):
+            h, a = _apply_block(cfg, mixer, ffn, p_slices[i], h, positions, enc_out)
+            aux = aux + a
+        return (h, aux), None
+
+    # One checkpoint per pattern repetition: measured on the 398B jamba
+    # dry-run, XLA's scheduler keeps the intra-rep backward working set
+    # ~0.1 GiB already, so nested per-block remat only added ~19% flops —
+    # rejected (see EXPERIMENTS.md §Perf).
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)), tuple(params["blocks"]))
+        return x, aux
+    carry = (x, jnp.float32(0))
+    for r in range(cfg.reps):  # unrolled: exact per-layer HLO costs
+        carry, _ = body_fn(carry, _rep_slice(params["blocks"], r))
+    return carry
+
+
+# ---------------------------------------------------------------------------
+# public: training / scoring forward
+# ---------------------------------------------------------------------------
+
+
+def encoder_forward(params, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, D) precomputed conv-frontend embeddings (stub)."""
+    x = frames.astype(COMPUTE_DTYPE)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+    enc = params["encoder"]
+
+    def body(carry, p_slice):
+        h = carry
+        h, _ = _apply_block(cfg, "attn_nc", "mlp", p_slice, h, positions, None)
+        return h, None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, enc["blocks"])
+    else:
+        for r in range(cfg.encoder_layers):
+            x, _ = body(x, jax.tree.map(lambda t: t[r], enc["blocks"]))
+    return L.rmsnorm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch):
+    """batch: tokens (B,S) [+ image_embeds | frames].  Returns (logits, aux)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    x = sharding.maybe_constrain(x, "tokens_act")
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None], tokens.shape)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encoder_forward(params, cfg, batch["frames"])
+    elif cfg.num_image_tokens:
+        enc_out = batch["image_embeds"].astype(COMPUTE_DTYPE)
+    x, aux = _scan_blocks(cfg, params, x, positions, enc_out)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head.astype(COMPUTE_DTYPE)
+    logits = sharding.maybe_constrain(logits, "logits")
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Next-token cross-entropy (+ MoE aux)."""
+    logits, aux = forward(params, cfg, batch)
+    targets = batch["tokens"][:, 1:]
+    logits = logits[:, :-1].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + one-token decode
+# ---------------------------------------------------------------------------
+
+
+def _init_cache_slice(cfg: ModelConfig, mixer, batch, cache_len, enc_len):
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    if mixer in ("attn", "attn_nc"):
+        shape = (batch, cache_len, kv, hd)
+        return {"k": jnp.zeros(shape, COMPUTE_DTYPE), "v": jnp.zeros(shape, COMPUTE_DTYPE)}
+    if mixer in ("cross", "attn_cross"):
+        c = {
+            "ck": jnp.zeros((batch, enc_len, kv, hd), COMPUTE_DTYPE),
+            "cv": jnp.zeros((batch, enc_len, kv, hd), COMPUTE_DTYPE),
+        }
+        if mixer == "attn_cross":
+            c["k"] = jnp.zeros((batch, cache_len, kv, hd), COMPUTE_DTYPE)
+            c["v"] = jnp.zeros((batch, cache_len, kv, hd), COMPUTE_DTYPE)
+        return c
+    if mixer == "mamba":
+        return {
+            "conv": jnp.zeros(
+                (batch, cfg.ssm_conv_width - 1, cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
+                COMPUTE_DTYPE,
+            ),
+            "state": jnp.zeros(
+                (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), COMPUTE_DTYPE
+            ),
+        }
+    raise ValueError(mixer)  # pragma: no cover
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, enc_len: int = 0):
+    """Zeroed cache pytree, stacked (reps, ...) per pattern position."""
+    caches = []
+    for mixer, _ in cfg.pattern():
+        slice_ = _init_cache_slice(cfg, mixer, batch, cache_len, max(enc_len, 1))
+        caches.append(jax.tree.map(lambda x: jnp.broadcast_to(x[None], (cfg.reps,) + x.shape), slice_))
+    return caches
+
+
+def _prefill_block(cfg, mixer, ffn, p, x, positions, enc_out, cache, cache_len):
+    """Like _apply_block but fills the caches."""
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    new_cache = dict(cache) if cache is not None else None
+    s = x.shape[1]
+    if mixer in ("attn", "attn_nc", "attn_cross"):
+        q, k, v = L._project_qkv(p["mixer"], cfg, h, h)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        out = L._sdpa(q, k, v, cfg, causal=mixer != "attn_nc")
+        out = out.reshape(*x.shape[:-1], -1) @ p["mixer"]["wo"].astype(COMPUTE_DTYPE)
+        new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+        new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+        if mixer == "attn_cross":
+            x = x + out
+            h2 = L.rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+            _, ck, cv = L._project_qkv(p["cross"], cfg, h2, enc_out)
+            new_cache["ck"], new_cache["cv"] = ck, cv
+            q2, _, _ = L._project_qkv(p["cross"], cfg, h2, h2[:, :1])
+            out = L._sdpa(q2, ck, cv, cfg, causal=False)
+            out = out.reshape(*x.shape[:-1], -1) @ p["cross"]["wo"].astype(COMPUTE_DTYPE)
+    elif mixer == "cross":
+        _, ck, cv = L._project_qkv(p["mixer"], cfg, h, enc_out)
+        new_cache["ck"], new_cache["cv"] = ck, cv
+        q, _, _ = L._project_qkv(p["mixer"], cfg, h, h[:, :1])
+        out = L._sdpa(q, ck, cv, cfg, causal=False)
+        out = out.reshape(*x.shape[:-1], -1) @ p["mixer"]["wo"].astype(COMPUTE_DTYPE)
+    elif mixer == "mamba":
+        out, (conv_hist, state) = ssm.mamba_forward(p["mixer"], cfg, h)
+        new_cache["conv"], new_cache["state"] = conv_hist, state
+    else:  # pragma: no cover
+        raise ValueError(mixer)
+    x = x + out
+    aux = jnp.float32(0)
+    if ffn != "none":
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        out, aux = (L.moe(p["ffn"], cfg, h) if ffn == "moe" else (L.mlp(p["ffn"], h), aux))
+        x = x + out
+    return x, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, cache_len: int):
+    """Run the prompt, return (last-position logits, caches)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    x = sharding.maybe_constrain(x, "tokens_act")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    enc_out = None
+    enc_len = 0
+    if cfg.encoder_layers:
+        enc_out = encoder_forward(params, cfg, batch["frames"])
+        enc_len = enc_out.shape[1]
+    elif cfg.num_image_tokens:
+        enc_out = batch["image_embeds"].astype(COMPUTE_DTYPE)
+        enc_len = enc_out.shape[1]
+    caches = init_cache(cfg, b, cache_len, enc_len)
+    pattern = cfg.pattern()
+
+    def body(carry, scanned):
+        h = carry
+        h = sharding.maybe_constrain(h, "tokens_act")
+        p_slices, c_slices = scanned
+        new_cs = []
+        for i, (mixer, ffn) in enumerate(pattern):
+            h, nc = _prefill_block(cfg, mixer, ffn, p_slices[i], h, positions, enc_out, c_slices[i], cache_len)
+            new_cs.append(nc)
+        return h, tuple(new_cs)
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body_fn, x, (tuple(params["blocks"]), tuple(caches)))
+    else:
+        reps_out = []
+        for r in range(cfg.reps):
+            c_r = tuple(jax.tree.map(lambda t: t[r], c) for c in caches)
+            x, nc = body_fn(x, (_rep_slice(params["blocks"], r), c_r))
+            reps_out.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *reps_out)
+    x = L.rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head.astype(COMPUTE_DTYPE)
+    return logits[:, 0], list(new_caches)
+
+
+def _decode_block(cfg, mixer, ffn, p, x, enc_out, cache, pos):
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    new_cache = dict(cache)
+    if mixer in ("attn", "attn_nc", "attn_cross"):
+        out, nk, nv = L.attention_decode(p["mixer"], cfg, h, cache["k"], cache["v"], pos)
+        new_cache["k"], new_cache["v"] = nk, nv
+        if mixer == "attn_cross":
+            x = x + out
+            h2 = L.rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+            b = x.shape[0]
+            q, _, _ = L._project_qkv(p["cross"], cfg, h2, h2)
+            outc = L._sdpa(q, cache["ck"], cache["cv"], cfg, causal=False)
+            out = outc.reshape(b, 1, -1) @ p["cross"]["wo"].astype(COMPUTE_DTYPE)
+    elif mixer == "cross":
+        b = x.shape[0]
+        q, _, _ = L._project_qkv(p["mixer"], cfg, h, h)
+        outc = L._sdpa(q, cache["ck"], cache["cv"], cfg, causal=False)
+        out = outc.reshape(b, 1, -1) @ p["mixer"]["wo"].astype(COMPUTE_DTYPE)
+    elif mixer == "mamba":
+        out, (conv, state) = ssm.mamba_decode(p["mixer"], cfg, h, cache["conv"], cache["state"])
+        new_cache["conv"], new_cache["state"] = conv, state
+    else:  # pragma: no cover
+        raise ValueError(mixer)
+    x = x + out
+    if ffn != "none":
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        out = L.moe(p["ffn"], cfg, h)[0] if ffn == "moe" else L.mlp(p["ffn"], h)
+        x = x + out
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos):
+    """token: (B,) int32; pos: scalar int32 (next position to fill).
+
+    Returns (logits (B, V), new caches)."""
+    x = params["embed"][token][:, None, :].astype(COMPUTE_DTYPE)
+    x = sharding.maybe_constrain(x, "tokens_act")
+    pattern = cfg.pattern()
+
+    def body(carry, scanned):
+        h = carry
+        h = sharding.maybe_constrain(h, "tokens_act")
+        p_slices, c_slices = scanned
+        new_cs = []
+        for i, (mixer, ffn) in enumerate(pattern):
+            h, nc = _decode_block(cfg, mixer, ffn, p_slices[i], h, None, c_slices[i], pos)
+            new_cs.append(nc)
+        return h, tuple(new_cs)
+
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (tuple(params["blocks"]), tuple(caches)))
+    else:
+        reps_out = []
+        for r in range(cfg.reps):
+            c_r = tuple(jax.tree.map(lambda t: t[r], c) for c in caches)
+            x, nc = body(x, (_rep_slice(params["blocks"], r), c_r))
+            reps_out.append(nc)
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *reps_out)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head.astype(COMPUTE_DTYPE))[:, 0]
+    return logits, list(new_caches)

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptConfig,
+    adafactor_init,
+    adamw_init,
+    global_norm,
+    make_optimizer,
+    schedule,
+)

@@ -1,0 +1,153 @@
+"""Optimizers (no optax dependency): AdamW with dtype-configurable moments
+and Adafactor (factored second moment) for trillion-param configs, plus
+cosine schedule with linear warmup and global-norm clipping.
+
+Moment dtypes matter at scale: kimi-k2 (1.03T params) over 512 chips
+with fp32 m/v would need 8 B/param of optimizer state alone; bf16
+moments (AdamW) or factored v (Adafactor) keep the per-device footprint
+inside a v5e's 16 GB (see DESIGN.md §5 and the dry-run memory analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    optimizer: Literal["adamw", "adafactor"] = "adamw"
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"  # "bfloat16" halves optimizer memory
+
+
+def schedule(cfg: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.lr_peak * step / jnp.maximum(1.0, cfg.warmup_steps)
+    frac = (step - cfg.warmup_steps) / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(np.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _clip(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params, cfg: OptConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def _adamw_update(grads, state, params, step, cfg: OptConfig):
+    lr = schedule(cfg, step)
+    grads, gnorm = _clip(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+    dt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, m, v, p):
+        m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + g * g * (1 - b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # no decay on norms/biases
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(dt), v32.astype(dt)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v}, {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory O(rows + cols) per matrix)
+# ---------------------------------------------------------------------------
+
+
+def adafactor_init(params, cfg: OptConfig):
+    def init(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(init, params, is_leaf=lambda x: isinstance(x, jnp.ndarray))}
+
+
+def _adafactor_update(grads, state, params, step, cfg: OptConfig):
+    lr = schedule(cfg, step)
+    grads, gnorm = _clip(grads, cfg.grad_clip)
+    b2 = cfg.b2
+
+    def upd(g, v, p):
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = v["vr"] * b2 + jnp.mean(g2, axis=-1) * (1 - b2)
+            vc = v["vc"] * b2 + jnp.mean(g2, axis=-2) * (1 - b2)
+            vhat = vr[..., None] * vc[..., None, :] / (
+                jnp.mean(vr, axis=-1, keepdims=True)[..., None] + 1e-30
+            )
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vv = v["v"] * b2 + g2 * (1 - b2)
+            vhat = vv
+            new_v = {"v": vv}
+        delta = g / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, new_v
+
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_v = tree.flatten_up_to(state["v"])
+    flat_p = jax.tree.leaves(params)
+    outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_p = jax.tree.unflatten(tree, [o[0] for o in outs])
+    new_v = jax.tree.unflatten(tree, [o[1] for o in outs])
+    return new_p, {"v": new_v}, {"lr": lr, "grad_norm": gnorm}
+
+
+def make_optimizer(cfg: OptConfig):
+    """Returns (init_fn(params) -> state, update_fn(grads, state, params, step))."""
+    if cfg.optimizer == "adamw":
+        return (lambda p: adamw_init(p, cfg)), (
+            lambda g, s, p, t: _adamw_update(g, s, p, t, cfg)
+        )
+    if cfg.optimizer == "adafactor":
+        return (lambda p: adafactor_init(p, cfg)), (
+            lambda g, s, p, t: _adafactor_update(g, s, p, t, cfg)
+        )
+    raise ValueError(cfg.optimizer)

@@ -1,0 +1,164 @@
+"""Core NTT library: oracles, identities, and property-based tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import modmath as mm
+from repro.core import ntt
+
+Q = mm.DEFAULT_Q
+RNG = np.random.default_rng(1234)
+
+
+def rand_poly(n, rng=RNG):
+    return rng.integers(0, Q, n).astype(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# modular arithmetic primitives vs python big-int ground truth
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+@settings(max_examples=200, deadline=None)
+def test_mulhi_u32(a, b):
+    got = int(np.asarray(mm.mulhi_u32(np.uint32(a), np.uint32(b))))
+    assert got == (a * b) >> 32
+
+
+@given(st.integers(0, Q - 1), st.integers(0, Q - 1))
+@settings(max_examples=200, deadline=None)
+def test_mont_mul(a, b):
+    qp, _, r2 = mm.mont_params(Q)
+    got = int(np.asarray(mm.mont_mul_u32(np.uint32(a), np.uint32(b), Q, qp)))
+    rinv = mm.inv_mod(1 << 32, Q)
+    assert got == a * b * rinv % Q
+
+
+@given(st.integers(0, Q - 1), st.integers(0, Q - 1))
+@settings(max_examples=200, deadline=None)
+def test_shoup_mul(a, w):
+    wsh = mm.shoup(w, Q)
+    got = int(np.asarray(mm.shoup_mulmod_u32(np.uint32(a), np.uint32(w), np.uint32(wsh), Q)))
+    assert got == a * w % Q
+
+
+@given(st.integers(0, Q - 1), st.integers(0, Q - 1))
+@settings(max_examples=100, deadline=None)
+def test_addsub_mod(a, b):
+    assert int(np.asarray(mm.addmod_u32(np.uint32(a), np.uint32(b), Q))) == (a + b) % Q
+    assert int(np.asarray(mm.submod_u32(np.uint32(a), np.uint32(b), Q))) == (a - b) % Q
+
+
+def test_mont_roundtrip_vector():
+    qp, _, r2 = mm.mont_params(Q)
+    x = rand_poly(4096)
+    m = mm.to_mont_u32(x, Q, qp, r2)
+    back = np.asarray(mm.from_mont_u32(m, Q, qp))
+    assert np.array_equal(back, x)
+
+
+def test_find_ntt_prime_and_roots():
+    for two_n in [2**12, 2**16]:
+        q = mm.find_ntt_prime(two_n)
+        assert mm.is_prime(q) and q % two_n == 1
+        w = mm.root_of_unity(q, two_n)
+        assert pow(w, two_n, q) == 1 and pow(w, two_n // 2, q) == q - 1
+
+
+# ---------------------------------------------------------------------------
+# NTT identities
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, 32, 256, 1024])
+def test_forward_matches_naive(n):
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly(n)
+    brv = mm.bit_reverse_indices(n)
+    assert np.array_equal(ntt.ntt_forward_np(a, ctx)[brv], ntt.naive_negacyclic_ntt(a, ctx))
+
+
+@pytest.mark.parametrize("n", [8, 64, 512, 4096, 16384])
+def test_roundtrip(n):
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly(n)
+    assert np.array_equal(ntt.ntt_inverse_np(ntt.ntt_forward_np(a, ctx), ctx), a)
+
+
+@pytest.mark.parametrize("n", [8, 64, 256])
+def test_polymul_vs_schoolbook(n):
+    ctx = ntt.make_context(Q, n)
+    a, b = rand_poly(n), rand_poly(n)
+    assert np.array_equal(
+        ntt.polymul_negacyclic_np(a, b, ctx), ntt.schoolbook_negacyclic(a, b, Q)
+    )
+
+
+@pytest.mark.parametrize("n", [16, 128, 1024])
+def test_cyclic_matches_naive(n):
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly(n)
+    assert np.array_equal(ntt.cyclic_ntt_np(a, Q), ntt.naive_cyclic_ntt(a, Q, ctx.omega))
+
+
+@pytest.mark.parametrize("n1,n2", [(4, 4), (8, 16), (32, 32)])
+def test_four_step(n1, n2):
+    n = n1 * n2
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly(n)
+    assert np.array_equal(
+        ntt.four_step_cyclic_np(a, Q, n1, n2), ntt.naive_cyclic_ntt(a, Q, ctx.omega)
+    )
+
+
+def test_jnp_matches_numpy():
+    n = 512
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly((3, n) if False else n).reshape(1, n).repeat(3, 0)
+    a = RNG.integers(0, Q, (3, n)).astype(np.uint32)
+    assert np.array_equal(np.asarray(ntt.ntt_forward_jnp(a, ctx)), ntt.ntt_forward_np(a, ctx))
+    f = ntt.ntt_forward_jnp(a, ctx)
+    assert np.array_equal(np.asarray(ntt.ntt_inverse_jnp(f, ctx)), a)
+
+
+@given(st.sampled_from([16, 64, 256]), st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_ntt_linearity(n, seed):
+    """NTT(alpha*a + b) == alpha*NTT(a) + NTT(b)  (transform linearity)."""
+    rng = np.random.default_rng(seed)
+    ctx = ntt.make_context(Q, n)
+    a, b = rand_poly(n, rng), rand_poly(n, rng)
+    alpha = int(rng.integers(1, Q))
+    lhs = ntt.ntt_forward_np(np.asarray(mm.np_addmod(mm.np_mulmod(a, alpha, Q), b, Q), np.uint32), ctx)
+    rhs = mm.np_addmod(mm.np_mulmod(ntt.ntt_forward_np(a, ctx), alpha, Q), ntt.ntt_forward_np(b, ctx), Q)
+    assert np.array_equal(lhs.astype(np.int64), rhs)
+
+
+@given(st.sampled_from([16, 64]), st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_polymul_commutative_and_unit(n, seed):
+    rng = np.random.default_rng(seed)
+    ctx = ntt.make_context(Q, n)
+    a, b = rand_poly(n, rng), rand_poly(n, rng)
+    ab = ntt.polymul_negacyclic_np(a, b, ctx)
+    ba = ntt.polymul_negacyclic_np(b, a, ctx)
+    assert np.array_equal(ab, ba)
+    one = np.zeros(n, np.uint32)
+    one[0] = 1
+    assert np.array_equal(ntt.polymul_negacyclic_np(a, one, ctx), a)
+
+
+def test_negacyclic_wraparound_sign():
+    """x^(N-1) * x == -x^N == q-1 at coefficient 0 (X^N = -1)."""
+    n = 32
+    ctx = ntt.make_context(Q, n)
+    xn1 = np.zeros(n, np.uint32)
+    xn1[n - 1] = 1
+    x = np.zeros(n, np.uint32)
+    x[1] = 1
+    prod = ntt.polymul_negacyclic_np(xn1, x, ctx)
+    expect = np.zeros(n, np.uint32)
+    expect[0] = Q - 1
+    assert np.array_equal(prod, expect)

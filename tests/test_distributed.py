@@ -1,0 +1,224 @@
+"""Distribution layer: sharding rules, virtual-mesh pjit, compression.
+
+Multi-device tests run in a SUBPROCESS with
+XLA_FLAGS=--xla_force_host_platform_device_count so the main pytest
+process stays single-device (per the dry-run contract)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.distributed import sharding as shd
+from repro.launch import steps as steps_lib
+from repro.optim import OptConfig
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = REPO_SRC
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# rule engine (no devices needed)
+# ---------------------------------------------------------------------------
+
+
+def _fake_mesh():
+    # abstract mesh over 1 device would sanitize everything; use dims of 1
+    # via a real 1-device mesh only for spec CALCULATION tests we check the
+    # rule fn directly instead.
+    return None
+
+
+def test_param_spec_rules():
+    from jax.sharding import PartitionSpec as P
+
+    class M:  # minimal mesh stub
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    spec = shd._param_spec("['blocks'][0]['mixer']['wq']", 3, M)
+    assert spec == P(None, ("data",), "model")
+    spec = shd._param_spec("['embed']", 2, M)
+    assert spec == P(("data",), "model")
+    spec = shd._param_spec("['blocks'][0]['ffn']['wi']", 4, M)  # MoE (reps,E,D,F)
+    assert spec == P(None, "model", ("data",), None)
+    spec = shd._param_spec("['blocks'][0]['ln1']", 2, M)
+    assert spec == P(None, None)
+
+
+def test_sanitize_drops_indivisible():
+    from jax.sharding import PartitionSpec as P
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    s = shd._sanitize(M, P("model", "data"), (48, 64))
+    assert s == P("model", "data")  # both divisible by 16: kept
+    s = shd._sanitize(M, P("model", "data"), (48, 30))
+    assert s == P("model", None)  # 30 % 16 != 0: dropped
+    s = shd._sanitize(M, P("model", "data"), (50, 30))
+    assert s == P(None, None)
+
+
+def test_dp_axes_both_meshes():
+    class M2:
+        axis_names = ("data", "model")
+
+    class M3:
+        axis_names = ("pod", "data", "model")
+
+    assert shd.dp_axes(M2) == ("data",)
+    assert shd.dp_axes(M3) == ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# virtual-mesh integration (subprocess)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_pjit_train_step_small_mesh():
+    """A reduced model trains one step under a 2x4 mesh with our rules, and
+    the result matches the single-device step bit-for-bit in fp32."""
+    out = run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import get_config
+        from repro.distributed import sharding as shd
+        from repro.launch import steps as S
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import transformer as T
+        from repro.optim import OptConfig
+        from repro.data.pipeline import SyntheticStream
+
+        cfg = get_config('qwen3-8b').reduced()
+        opt_cfg = OptConfig(total_steps=10, warmup_steps=1)
+        mesh = make_host_mesh(data=2, model=4)
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        init_opt = S.make_opt_init(cfg, opt_cfg)
+        opt = init_opt(params)
+        batch = {k: jnp.asarray(v) for k, v in SyntheticStream(cfg, 4, 32).batch_at(0).items()}
+
+        step = S.make_train_step(cfg, opt_cfg)
+        # single device reference
+        p_ref, _, m_ref = step(params, opt, batch, jnp.int32(0))
+
+        p_sh = shd.param_shardings(mesh, jax.eval_shape(lambda: params))
+        o_sh = shd.opt_shardings(mesh, jax.eval_shape(lambda: opt))
+        b_sh = shd.batch_shardings(mesh, jax.eval_shape(lambda: batch))
+        with mesh:
+            jit_step = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh, None),
+                               out_shardings=(p_sh, o_sh, None))
+            p_new, o_new, metrics = jit_step(params, opt, batch, jnp.int32(0))
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))), p_ref, p_new)
+        print('MAXDIFF', max(jax.tree.leaves(d)))
+        print('LOSS', float(metrics['loss']), float(m_ref['loss']))
+        """
+    )
+    maxdiff = float(out.split("MAXDIFF")[1].split()[0])
+    assert maxdiff < 5e-3, out  # bf16 reduction-order wiggle only
+
+
+@pytest.mark.slow
+def test_compressed_psum_small_mesh():
+    out = run_subprocess(
+        """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.distributed.compression import compressed_psum
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = jax.make_mesh((2, 4), ('pod', 'data'),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 64)), jnp.float32)
+
+        def f(x):
+            return compressed_psum(x, 'pod')
+
+        g = shard_map(f, mesh=mesh, in_specs=P('pod', None), out_specs=P('pod', None))
+        got = g(x)  # per-pod sum of the two pod shards
+        exact = x[:4] + x[4:]
+        err = float(jnp.max(jnp.abs(got[:4] - exact)))
+        scale = float(jnp.max(jnp.abs(x)) / 127.0)
+        print('ERR', err, 'BOUND', 2 * scale)
+        assert err <= 2 * scale + 1e-6
+        """
+    )
+    assert "ERR" in out
+
+
+@pytest.mark.slow
+def test_elastic_checkpoint_restore_across_meshes(tmp_path):
+    """Save under a 4-device mesh, restore under 2 devices (elastic)."""
+    out = run_subprocess(
+        f"""
+        import jax, jax.numpy as jnp
+        from repro.ckpt.checkpoint import CheckpointManager
+        from repro.distributed import sharding as shd
+        from repro.launch.mesh import make_host_mesh
+
+        mgr = CheckpointManager({str(tmp_path)!r})
+        mesh = make_host_mesh(data=4, model=1)
+        state = {{'embed': jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+        sh = shd.param_shardings(mesh, jax.eval_shape(lambda: state))
+        state = jax.tree.map(jax.device_put, state, sh)
+        mgr.save(1, state)
+
+        mesh2 = make_host_mesh(data=2, model=1)  # "smaller cluster"
+        sh2 = shd.param_shardings(mesh2, jax.eval_shape(lambda: state))
+        restored, _ = mgr.restore(1, jax.eval_shape(lambda: state), sh2)
+        assert restored['embed'].sharding.mesh.shape['data'] == 2
+        import numpy as np
+        np.testing.assert_array_equal(np.asarray(restored['embed']).ravel(), np.arange(64))
+        print('ELASTIC OK')
+        """,
+        devices=4,
+    )
+    assert "ELASTIC OK" in out
+
+
+# ---------------------------------------------------------------------------
+# spec coverage for every arch (abstract, no devices)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "kimi-k2-1t-a32b", "mamba2-780m", "whisper-small"])
+def test_shardings_cover_every_param(arch):
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+        def __init__(self):
+            pass
+
+    cfg = get_config(arch)
+    shapes = steps_lib.param_specs(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    n_sharded = 0
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        spec = shd._param_spec(pstr, leaf.ndim, M)
+        spec = shd._sanitize(M, jax.sharding.PartitionSpec(
+            *spec, *([None] * (leaf.ndim - len(spec)))), leaf.shape)
+        assert len(spec) <= leaf.ndim
+        if any(s is not None for s in spec):
+            n_sharded += 1
+    # the overwhelming majority of parameter BYTES must be sharded
+    assert n_sharded >= len(flat) * 0.4, (arch, n_sharded, len(flat))

@@ -1,0 +1,196 @@
+"""PIM simulator: functional bit-exactness, timing invariants, paper claims."""
+import numpy as np
+import pytest
+
+from repro.core import area, modmath as mm, ntt
+from repro.core.mapping import RowCentricMapper, pim_ntt
+from repro.core.pim_config import EnergyModel, PimConfig
+from repro.core.pimsim import BankTimer, simulate_ntt
+from repro.core.polymul import pim_polymul
+
+Q = mm.DEFAULT_Q
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# functional: command-stream execution == reference NTT (the paper's own
+# "two-way DRAMsim3 communication to double-check ... functionality")
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [64, 256, 1024, 4096])
+@pytest.mark.parametrize("nb", [1, 2, 4, 6])
+def test_functional_inverse(n, nb):
+    ctx = ntt.make_context(Q, n)
+    a = RNG.integers(0, Q, n).astype(np.uint32)
+    got, _ = pim_ntt(a, ctx, PimConfig(num_buffers=nb))
+    assert np.array_equal(got, ntt.ntt_inverse_np(a, ctx))
+
+
+@pytest.mark.parametrize("n", [64, 1024])
+@pytest.mark.parametrize("nb", [1, 2, 5])
+def test_functional_forward(n, nb):
+    ctx = ntt.make_context(Q, n)
+    a = RNG.integers(0, Q, n).astype(np.uint32)
+    got, _ = pim_ntt(a, ctx, PimConfig(num_buffers=nb), forward=True)
+    assert np.array_equal(got, ntt.ntt_forward_np(a, ctx))
+
+
+@pytest.mark.parametrize("n", [256, 2048])
+def test_functional_polymul(n):
+    ctx = ntt.make_context(Q, n)
+    a = RNG.integers(0, Q, n).astype(np.uint32)
+    b = RNG.integers(0, Q, n).astype(np.uint32)
+    got, timing = pim_polymul(a, b, ctx, PimConfig(num_buffers=4))
+    assert np.array_equal(got, ntt.schoolbook_negacyclic(a, b, Q))
+    assert timing.ns > 0
+
+
+# ---------------------------------------------------------------------------
+# timing invariants + the paper's headline claims
+# ---------------------------------------------------------------------------
+
+
+def test_more_buffers_never_slower():
+    for n in [256, 1024, 8192]:
+        t = [simulate_ntt(n, PimConfig(num_buffers=nb)).ns for nb in (1, 2, 4, 6, 8)]
+        assert all(t[i] >= t[i + 1] - 1e-6 for i in range(len(t) - 1)), (n, t)
+
+
+def test_one_aux_buffer_order_of_magnitude():
+    """§VI-C: 'even just one auxiliary buffer can improve performance by an
+    order of magnitude' (vs the single-buffer datapath)."""
+    for n in [1024, 4096]:
+        t1 = simulate_ntt(n, PimConfig(num_buffers=1)).ns
+        t2 = simulate_ntt(n, PimConfig(num_buffers=2)).ns
+        assert t1 / t2 > 5.0, (n, t1 / t2)
+
+
+def test_multi_buffer_speedup_range():
+    """§VI-C: more buffers give ~1.5-2.5x, larger N benefits more."""
+    r = {}
+    for n in [512, 4096, 16384]:
+        t2 = simulate_ntt(n, PimConfig(num_buffers=2)).ns
+        t6 = simulate_ntt(n, PimConfig(num_buffers=6)).ns
+        r[n] = t2 / t6
+        assert 1.3 < r[n] < 3.0, r
+    assert r[16384] > r[512], r  # larger N benefits more
+
+
+def test_act_count_decreases_with_buffers():
+    for n in [2048, 8192]:
+        acts = [simulate_ntt(n, PimConfig(num_buffers=nb)).stats["act"] for nb in (2, 4, 6)]
+        assert acts[0] > acts[1] > acts[2], acts
+
+
+def test_inter_row_act_bound():
+    """Nb=2 inter-row regime: ~2 activations per atom-pair butterfly, and
+    the idealized row-level bound 3N/(2R) per stage is respected by the
+    per-row-pair activation count when buffers are scaled up."""
+    cfg = PimConfig(num_buffers=2)
+    n = 2048  # 8 rows -> 3 inter-row stages
+    res = simulate_ntt(n, cfg)
+    n_inter_stages = 3
+    pairs_per_stage = n // (2 * cfg.atom_words)
+    # 2 Acts per pair + small leading terms
+    assert res.stats["act"] <= 2 * n_inter_stages * pairs_per_stage + 4 * (n // cfg.row_words) + 8
+
+
+def test_pipelining_helps():
+    for nb in (2, 4):
+        cfg = PimConfig(num_buffers=nb)
+        cmds = RowCentricMapper(cfg, 4096).commands()
+        piped = BankTimer(cfg, pipelined=True).simulate(cmds).ns
+        serial = BankTimer(cfg, pipelined=False).simulate(cmds).ns
+        assert piped < serial
+
+
+def test_frequency_sensitivity():
+    """Fig 8: dropping CU clock 1200->300 MHz slows large-N NTT <= ~1.65x
+    (DRAM latencies fixed in ns dominate)."""
+    for n, bound in [(4096, 1.9), (16384, 1.9)]:
+        fast = simulate_ntt(n, PimConfig(num_buffers=2, cu_clock_mhz=1200.0)).ns
+        slow = simulate_ntt(n, PimConfig(num_buffers=2, cu_clock_mhz=300.0)).ns
+        assert slow / fast < bound, (n, slow / fast)
+        assert slow / fast > 1.05  # CU does contribute
+
+
+def test_latency_grows_superlinearly():
+    """Table III: latency roughly x2.4-2.7 per doubling of N (O(N log N) +
+    growing inter-row fraction)."""
+    prev = None
+    for n in [512, 1024, 2048, 4096]:
+        t = simulate_ntt(n, PimConfig(num_buffers=2)).ns
+        if prev is not None:
+            assert 2.0 < t / prev < 3.2, (n, t / prev)
+        prev = t
+
+
+def test_paper_table3_magnitude():
+    """Our absolute latency should be within 2x of the paper's Table III
+    (exact DRAMsim3 internals differ; the trend is the claim)."""
+    paper_nb2 = {256: 3.90, 512: 14.16, 1024: 38.19, 2048: 95.84, 4096: 230.45}
+    for n, p in paper_nb2.items():
+        ours = simulate_ntt(n, PimConfig(num_buffers=2)).us
+        assert 0.5 < ours / p < 2.0, (n, ours, p)
+
+
+def test_row_conflict_assertions_hold():
+    """The static schedule never reads/writes a closed row (mapper emits
+    Act correctly) — would raise AssertionError otherwise."""
+    for nb in (1, 2, 4, 7):
+        cfg = PimConfig(num_buffers=nb)
+        ctx = ntt.make_context(Q, 1024)
+        a = RNG.integers(0, Q, 1024).astype(np.uint32)
+        pim_ntt(a, ctx, cfg)  # FunctionalBank asserts open-row discipline
+        BankTimer(cfg).simulate(RowCentricMapper(cfg, 1024).commands())
+
+
+# ---------------------------------------------------------------------------
+# area / energy models (Table II)
+# ---------------------------------------------------------------------------
+
+
+def test_area_model_fits_table2():
+    a_cu, a_buf, resid = area.fit_area_model()
+    assert resid < 0.001  # mm^2
+    assert a_cu > 0 and a_buf > 0
+
+
+def test_area_below_newton():
+    """Headline: 'less than half of Newton's' overhead at Nb<=6."""
+    assert area.area_overhead_pct(6) < area.newton_overhead_pct()
+    assert area.area_overhead_pct(1) < 0.6
+
+
+def test_energy_monotonic_in_n():
+    e = [simulate_ntt(n, PimConfig(num_buffers=2)).energy_nj() for n in (256, 1024, 4096)]
+    assert e[0] < e[1] < e[2]
+
+
+def test_energy_decreases_with_buffers():
+    """More buffers -> fewer activations -> less energy (Table III shows
+    Nb=4 < Nb=2 energy)."""
+    e2 = simulate_ntt(4096, PimConfig(num_buffers=2)).energy_nj()
+    e4 = simulate_ntt(4096, PimConfig(num_buffers=4)).energy_nj()
+    assert e4 < e2
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: multi-bank scaling under shared-bus contention (§VII)
+# ---------------------------------------------------------------------------
+
+
+def test_multibank_scaling():
+    from repro.core.pimsim import simulate_multibank
+
+    r1 = simulate_multibank(4096, 1, PimConfig(num_buffers=2))
+    assert r1.speedup == pytest.approx(1.0)
+    r2 = simulate_multibank(4096, 2, PimConfig(num_buffers=2))
+    assert 1.5 < r2.speedup <= 2.0
+    # saturation: past the bus knee, speedup stops growing linearly
+    r32 = simulate_multibank(4096, 32, PimConfig(num_buffers=2))
+    assert r32.efficiency < 1.0
+    assert r32.speedup >= r2.speedup  # never negative returns
+    # latency never below single-bank
+    assert r32.latency_ns >= r1.latency_ns
