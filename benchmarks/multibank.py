@@ -1,25 +1,106 @@
-"""Beyond-paper: bank-level parallelism vs shared command-bus contention.
+"""Beyond-paper: device-level scaling of NTT-PIM under shared-bus traffic.
 
 The paper (§VII) expects near-linear speedup from multiple banks and
-leaves the system-level study to future work; this benchmark quantifies
-where the shared command/address bus (including the per-CU-op twiddle
-parameter traffic of §IV-A) caps the scaling."""
+leaves the system-level study to future work.  This benchmark runs the
+cycle-level `repro.pimsys` memory system three ways:
+
+  1. banks-per-channel sweep: cycle-level controller latency vs the
+     analytic shared-bus lower bound (where does the bus knee appear?)
+  2. channel sweep at fixed total banks: private buses vs shared bus
+  3. open-loop serving: Poisson polymul arrivals, latency percentiles
+     + throughput vs offered rate
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.multibank [--quick]
+    PYTHONPATH=src python -m benchmarks.run --only multibank
+"""
+import argparse
+
 from repro.core.pim_config import PimConfig
-from repro.core.pimsim import simulate_multibank
+from repro.core.pimsim import simulate_multibank, simulate_ntt
+from repro.pimsys import DeviceTopology, PolymulJob, RequestScheduler
 
 
-def run(emit):
-    for n in [1024, 4096, 16384]:
-        for nb in (2, 6):
+def _bank_sweep(emit, sizes, bank_counts, nbs):
+    for n in sizes:
+        for nb in nbs:
+            cfg = PimConfig(num_buffers=nb)
+            single = simulate_ntt(n, cfg)
             knee = None
-            for banks in [1, 2, 4, 8, 16, 32]:
-                r = simulate_multibank(n, banks, PimConfig(num_buffers=nb))
+            for banks in bank_counts:
+                r = simulate_multibank(n, banks, cfg, single=single)
                 emit(
                     f"multibank/N={n}/Nb={nb}/banks={banks}",
                     r.latency_ns / 1e3,
-                    f"speedup=x{r.speedup:.1f};eff={r.efficiency:.2f};bus={r.bus_utilization:.2f}",
+                    f"speedup=x{r.speedup:.1f};eff={r.efficiency:.2f};"
+                    f"bus={r.bus_utilization:.2f};"
+                    f"analytic_lb_us={r.analytic_latency_ns / 1e3:.1f}",
                 )
                 if knee is None and r.efficiency < 0.95:
                     knee = banks
             emit(f"multibank/N={n}/Nb={nb}/knee", 0.0,
-                 f"linear_until~{(knee or 33) // 2}banks")
+                 f"linear_until~{(knee or max(bank_counts) + 1) // 2}banks")
+
+
+def _channel_sweep(emit, n, total_banks, channel_counts, nb):
+    single = simulate_ntt(n, PimConfig(num_buffers=nb)).ns
+    for ch in channel_counts:
+        if total_banks % ch:
+            continue
+        cfg = PimConfig(num_buffers=nb, num_channels=ch,
+                        num_banks=total_banks // ch)
+        res = RequestScheduler(cfg).run_closed_loop(
+            [PolymulJob(n)] * total_banks)
+        emit(
+            f"multibank/channels/N={n}/banks={total_banks}/ch={ch}",
+            res.makespan_ns / 1e3,
+            f"tput={res.throughput_jobs_per_ms:.1f}jobs_ms;"
+            f"p99={res.latency_percentiles_us()['p99']:.1f}us;"
+            f"single_ntt_us={single / 1e3:.1f}",
+        )
+
+
+def _rate_sweep(emit, n, topo, rates, jobs_per_rate):
+    cfg = PimConfig(num_buffers=4, num_channels=topo.channels,
+                    num_banks=topo.banks_per_rank)
+    for rate in rates:
+        res = RequestScheduler(cfg).run_open_loop(
+            [PolymulJob(n)] * jobs_per_rate, rate_per_us=rate, seed=0)
+        p = res.latency_percentiles_us()
+        emit(
+            f"multibank/openloop/N={n}/{topo.channels}ch x{topo.banks_per_rank}ba/rate={rate}",
+            p["p50"],
+            f"p95={p['p95']:.1f}us;p99={p['p99']:.1f}us;"
+            f"tput={res.throughput_jobs_per_ms:.1f}jobs_ms;"
+            f"qdelay={res.queue_delay_ns.mean() / 1e3:.1f}us",
+        )
+
+
+def run(emit, quick: bool = False):
+    if quick:
+        _bank_sweep(emit, sizes=[1024], bank_counts=[1, 2, 4, 8], nbs=(2,))
+        _channel_sweep(emit, n=512, total_banks=4, channel_counts=[1, 2, 4], nb=2)
+        _rate_sweep(emit, n=512, topo=DeviceTopology(channels=2, banks_per_rank=2),
+                    rates=[0.05, 0.2], jobs_per_rate=16)
+        return
+    _bank_sweep(emit, sizes=[1024, 4096], bank_counts=[1, 2, 4, 8, 16, 32],
+                nbs=(2, 6))
+    _channel_sweep(emit, n=1024, total_banks=8, channel_counts=[1, 2, 4, 8], nb=2)
+    _rate_sweep(emit, n=1024, topo=DeviceTopology(channels=2, banks_per_rank=4),
+                rates=[0.02, 0.05, 0.1, 0.2], jobs_per_rate=32)
+
+
+def main():
+    from benchmarks.run import emit
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for smoke tests (~seconds)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    run(emit, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Fast regression smoke: tier-1 subset + device-level benchmark, each under
+# a wall-clock timeout so simulator runtime regressions fail loudly.
+#
+#   ./scripts/smoke.sh            # defaults: 300s tests, 120s benchmark
+#   SMOKE_TEST_TIMEOUT=600 ./scripts/smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+TEST_TIMEOUT="${SMOKE_TEST_TIMEOUT:-300}"
+BENCH_TIMEOUT="${SMOKE_BENCH_TIMEOUT:-120}"
+
+echo "== smoke: fast tier-1 subset (-m 'not slow', ${TEST_TIMEOUT}s budget) =="
+timeout "${TEST_TIMEOUT}" python -m pytest -q -m "not slow" \
+    tests/test_core_ntt.py tests/test_pim_sim.py tests/test_pimsys.py
+
+echo "== smoke: device-level benchmark (--quick, ${BENCH_TIMEOUT}s budget) =="
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.multibank --quick
+
+echo "smoke OK"

@@ -22,6 +22,13 @@ class PimConfig:
     num_banks: int = 1
     num_buffers: int = 2            # Nb, including the primary (GSA)
 
+    # -- device level (repro.pimsys; beyond the paper's single bank) --------
+    # One shared command/address bus per channel; ranks on a channel share
+    # that bus (HBM pseudo-channel style), banks within a rank are the
+    # paper's independent NTT-PIM banks.
+    num_channels: int = 1
+    num_ranks: int = 1
+
     # -- DRAM timing in cycles at dram_clock_mhz (Table I) ------------------
     CL: int = 14
     tCCD: int = 2

@@ -55,7 +55,16 @@ class TimingResult:
         return (model or EnergyModel()).energy_nj(self.stats)
 
 
-class BankTimer:
+class BankEngine:
+    """Per-bank resource/hazard tracker (the inner state machine of
+    `BankTimer`), factored out so `repro.pimsys.controller` can multiplex
+    MANY banks onto one shared command/address bus while reusing exactly
+    this timing model.  The bus itself is *external* state: callers pass
+    the bus-grant time into :meth:`issue` and own `bus_free = s + t_bus`
+    bookkeeping, which is what makes single-bank results bit-identical
+    between `BankTimer` and a one-bank channel controller.
+    """
+
     def __init__(self, cfg: PimConfig, pipelined: bool = True):
         self.cfg = cfg
         self.pipelined = pipelined
@@ -74,132 +83,185 @@ class BankTimer:
         self.t_buw = cfg.bu_word_latency * c
         self.t_param = cfg.param_load_cycles * d  # twiddle params on the bus
 
-    def simulate(self, commands: Iterable[Command]) -> TimingResult:
-        cfg = self.cfg
         nb = max(1, cfg.num_buffers)
+        self.col_t = 0.0  # column channel free
+        self.cu_t = 0.0
+        self.row_usable_t = 0.0
+        self.act_start_ok = 0.0  # tRAS / tWR gating for the next activate
+        self.open_row: int | None = None
+        self.data_ready = [0.0] * nb  # buffer contents valid
+        self.buf_free = [0.0] * nb  # last consumer done (WAR hazard)
+        self.reg_ready = [0.0, 0.0]
+        self.row_quiesce = 0.0  # last in-flight column transfer on the open row
+        self.end_t = 0.0
+        self.serial_barrier = 0.0
+        self.next_ref = cfg.tREFI_ns
+        self.stats: dict = defaultdict(int)
+
+    # -- arbitration support -------------------------------------------------
+    def bus_hold(self, cmd: Command) -> float:
+        """Bus occupancy of `cmd`: 1 command cycle, plus the (w0, r_w)
+        parameter stream for CU ops (§IV-A)."""
+        if isinstance(cmd, (C1, C2, CMul)):
+            return self.t_param + self.t_bus
+        return self.t_bus
+
+    def earliest_start(self, cmd: Command, bus_free: float) -> float:
+        """The start time :meth:`issue` would produce, without mutating —
+        used by the ready-first arbiter to rank competing banks."""
+        return self._start(cmd, bus_free, commit=False)
+
+    def _start(self, cmd: Command, bus_free: float, commit: bool) -> float:
+        """Start time of `cmd`: dependencies, refresh stall, param stream.
+
+        The single source of truth for WHEN a command begins; `_commit`
+        holds the per-type state updates for what it then does.
+        """
+        deps, is_dram, is_param = self._classify(cmd)
+        s = max(bus_free, self.serial_barrier, *deps)
+        if is_dram:
+            # periodic refresh stall (bank busy tRFC every tREFI)
+            next_ref = self.next_ref
+            while s >= next_ref:
+                if commit:
+                    self.stats["refresh"] += 1
+                s = max(s, next_ref + self.cfg.tRFC_ns)
+                next_ref += self.cfg.tREFI_ns
+            if commit:
+                self.next_ref = next_ref
+        if is_param:
+            s += self.t_param  # (w0, r_w) stream over the shared bus first
+        return s
+
+    def _classify(self, cmd: Command) -> tuple[list[float], bool, bool]:
+        """(dependency times, uses DRAM refresh gating, is CU param op)."""
+        if isinstance(cmd, Act):
+            # PRE may not cut off in-flight transfers or write recovery.
+            return [self.act_start_ok, self.row_quiesce], True, False
+        if isinstance(cmd, ColRead):
+            return [self.col_t, self.row_usable_t, self.buf_free[cmd.buf]], True, False
+        if isinstance(cmd, ColWrite):
+            return [self.col_t, self.row_usable_t, self.data_ready[cmd.buf]], True, False
+        if isinstance(cmd, C1):
+            return [self.cu_t, self.data_ready[cmd.buf]], False, True
+        if isinstance(cmd, C2):
+            return [self.cu_t] + [self.data_ready[b] for b in cmd.bufs_u + cmd.bufs_v], False, True
+        if isinstance(cmd, CMul):
+            return [self.cu_t, self.data_ready[cmd.buf_u], self.data_ready[cmd.buf_v]], False, True
+        if isinstance(cmd, (WordLoad, WordStore)):
+            return [self.col_t, self.row_usable_t, self.reg_ready[cmd.reg]], True, False
+        if isinstance(cmd, BUWord):
+            return [self.cu_t, self.reg_ready[0], self.reg_ready[1]], False, False
+        raise TypeError(cmd)
+
+    # -- issue ---------------------------------------------------------------
+    def issue(self, cmd: Command, bus_free: float) -> tuple[float, float]:
+        """Issue one command once the bus grants at `bus_free`.
+
+        Returns `(s, done)`; the caller must advance the shared bus to
+        `s + t_bus` (the command occupies the bus until then — for CU ops
+        `s` already includes the t_param parameter stream).
+        """
+        s = self._start(cmd, bus_free, commit=True)
+        done = self._commit(cmd, s)
+        self.end_t = max(self.end_t, done)
+        if not self.pipelined:
+            self.serial_barrier = done
+        return s, done
+
+    def _commit(self, cmd: Command, s: float) -> float:
+        """Apply `cmd`'s state updates given its start time; return done."""
+        cfg = self.cfg
+        if isinstance(cmd, Act):
+            done = s + self.t_act
+            self.open_row = cmd.row
+            self.row_usable_t = done
+            self.act_start_ok = s + self.t_ras
+            self.stats["act"] += 1
+        elif isinstance(cmd, ColRead):
+            assert self.open_row == cmd.row
+            self.col_t = s + self.t_ccd
+            done = s + self.t_cl + self.t_ccd
+            self.data_ready[cmd.buf] = done
+            self.row_quiesce = max(self.row_quiesce, done)
+            self.stats["col_read"] += 1
+        elif isinstance(cmd, ColWrite):
+            assert self.open_row == cmd.row
+            self.col_t = s + self.t_ccd
+            done = s + self.t_ccd
+            self.buf_free[cmd.buf] = done
+            self.act_start_ok = max(self.act_start_ok, done + self.t_wr)
+            self.row_quiesce = max(self.row_quiesce, done)
+            self.stats["col_write"] += 1
+        elif isinstance(cmd, C1):
+            done = s + self.t_c1
+            self.cu_t = done
+            self.data_ready[cmd.buf] = done
+            self.buf_free[cmd.buf] = done
+            self.stats["c1"] += 1
+            self.stats["bu_ops"] += (cfg.atom_words // 2) * (cmd.stages_hi - cmd.stages_lo)
+        elif isinstance(cmd, C2):
+            done = s + self.t_c2 + self.t_c2_extra * (len(cmd.bufs_u) - 1)
+            self.cu_t = done
+            for b in cmd.bufs_u + cmd.bufs_v:
+                self.data_ready[b] = done
+                self.buf_free[b] = done
+            self.stats["c2"] += 1
+            self.stats["bu_ops"] += cfg.atom_words * len(cmd.bufs_u)
+        elif isinstance(cmd, CMul):
+            done = s + self.t_c2
+            self.cu_t = done
+            self.data_ready[cmd.buf_u] = done
+            self.buf_free[cmd.buf_u] = done
+            self.buf_free[cmd.buf_v] = done
+            self.stats["cmul"] += 1
+        elif isinstance(cmd, WordLoad):
+            assert self.open_row == cmd.row
+            self.col_t = s + self.t_ccd
+            done = s + self.t_cl
+            self.reg_ready[cmd.reg] = done
+            self.row_quiesce = max(self.row_quiesce, done)
+            self.stats["word_load"] += 1
+        elif isinstance(cmd, WordStore):
+            assert self.open_row == cmd.row
+            self.col_t = s + self.t_ccd
+            done = s + self.t_ccd
+            self.act_start_ok = max(self.act_start_ok, done + self.t_wr)
+            self.row_quiesce = max(self.row_quiesce, done)
+            self.stats["word_store"] += 1
+        elif isinstance(cmd, BUWord):
+            done = s + self.t_buw
+            self.cu_t = done
+            self.reg_ready[0] = self.reg_ready[1] = done
+            self.stats["bu_word"] += 1
+            self.stats["bu_ops"] += 1
+        else:  # pragma: no cover
+            raise TypeError(cmd)
+        return done
+
+
+class BankTimer:
+    def __init__(self, cfg: PimConfig, pipelined: bool = True):
+        self.cfg = cfg
+        self.pipelined = pipelined
+
+    def simulate(self, commands: Iterable[Command]) -> TimingResult:
+        eng = BankEngine(self.cfg, pipelined=self.pipelined)
         bus_t = 0.0
-        col_t = 0.0  # column channel free
-        cu_t = 0.0
-        row_usable_t = 0.0
-        act_start_ok = 0.0  # tRAS / tWR gating for the next activate
-        open_row = None
-        data_ready = [0.0] * nb  # buffer contents valid
-        buf_free = [0.0] * nb  # last consumer done (WAR hazard)
-        reg_ready = [0.0, 0.0]
-        row_quiesce = 0.0  # last in-flight column transfer on the open row
-        end_t = 0.0
-        serial_barrier = 0.0
-        stats: dict = defaultdict(int)
         phase_ns: dict = {}
         phase_name = "intra"
         phase_start = 0.0
 
-        next_ref = cfg.tREFI_ns
-
-        def begin(*deps: float) -> float:
-            return max(bus_t, serial_barrier, *deps)
-
-        def dram_begin(*deps: float) -> float:
-            """begin() + periodic refresh stall (bank busy tRFC every tREFI)."""
-            nonlocal next_ref
-            s = begin(*deps)
-            while s >= next_ref:
-                stats["refresh"] += 1
-                s = max(s, next_ref + cfg.tRFC_ns)
-                next_ref += cfg.tREFI_ns
-            return s
-
         for cmd in commands:
             if isinstance(cmd, Mark):
-                phase_ns[phase_name] = phase_ns.get(phase_name, 0.0) + (end_t - phase_start)
-                phase_name, phase_start = cmd.name, end_t
+                phase_ns[phase_name] = phase_ns.get(phase_name, 0.0) + (eng.end_t - phase_start)
+                phase_name, phase_start = cmd.name, eng.end_t
                 continue
+            s, _ = eng.issue(cmd, bus_t)
+            bus_t = s + eng.t_bus
 
-            if isinstance(cmd, Act):
-                # PRE may not cut off in-flight transfers or write recovery.
-                s = dram_begin(act_start_ok, row_quiesce)
-                done = s + self.t_act
-                open_row = cmd.row
-                row_usable_t = done
-                act_start_ok = s + self.t_ras
-                stats["act"] += 1
-            elif isinstance(cmd, ColRead):
-                assert open_row == cmd.row
-                s = dram_begin(col_t, row_usable_t, buf_free[cmd.buf])
-                col_t = s + self.t_ccd
-                done = s + self.t_cl + self.t_ccd
-                data_ready[cmd.buf] = done
-                row_quiesce = max(row_quiesce, done)
-                stats["col_read"] += 1
-            elif isinstance(cmd, ColWrite):
-                assert open_row == cmd.row
-                s = dram_begin(col_t, row_usable_t, data_ready[cmd.buf])
-                col_t = s + self.t_ccd
-                done = s + self.t_ccd
-                buf_free[cmd.buf] = done
-                act_start_ok = max(act_start_ok, done + self.t_wr)
-                row_quiesce = max(row_quiesce, done)
-                stats["col_write"] += 1
-            elif isinstance(cmd, C1):
-                # (w0, r_w) parameters stream over the shared bus first.
-                s = begin(cu_t, data_ready[cmd.buf]) + self.t_param
-                done = s + self.t_c1
-                cu_t = done
-                data_ready[cmd.buf] = done
-                buf_free[cmd.buf] = done
-                stats["c1"] += 1
-                stats["bu_ops"] += (cfg.atom_words // 2) * (cmd.stages_hi - cmd.stages_lo)
-            elif isinstance(cmd, C2):
-                deps = [data_ready[b] for b in cmd.bufs_u + cmd.bufs_v]
-                s = begin(cu_t, *deps) + self.t_param
-                done = s + self.t_c2 + self.t_c2_extra * (len(cmd.bufs_u) - 1)
-                cu_t = done
-                for b in cmd.bufs_u + cmd.bufs_v:
-                    data_ready[b] = done
-                    buf_free[b] = done
-                stats["c2"] += 1
-                stats["bu_ops"] += cfg.atom_words * len(cmd.bufs_u)
-            elif isinstance(cmd, CMul):
-                s = begin(cu_t, data_ready[cmd.buf_u], data_ready[cmd.buf_v]) + self.t_param
-                done = s + self.t_c2
-                cu_t = done
-                data_ready[cmd.buf_u] = done
-                buf_free[cmd.buf_u] = done
-                buf_free[cmd.buf_v] = done
-                stats["cmul"] += 1
-            elif isinstance(cmd, WordLoad):
-                assert open_row == cmd.row
-                s = dram_begin(col_t, row_usable_t, reg_ready[cmd.reg])
-                col_t = s + self.t_ccd
-                done = s + self.t_cl
-                reg_ready[cmd.reg] = done
-                row_quiesce = max(row_quiesce, done)
-                stats["word_load"] += 1
-            elif isinstance(cmd, WordStore):
-                assert open_row == cmd.row
-                s = dram_begin(col_t, row_usable_t, reg_ready[cmd.reg])
-                col_t = s + self.t_ccd
-                done = s + self.t_ccd
-                act_start_ok = max(act_start_ok, done + self.t_wr)
-                row_quiesce = max(row_quiesce, done)
-                stats["word_store"] += 1
-            elif isinstance(cmd, BUWord):
-                s = begin(cu_t, reg_ready[0], reg_ready[1])
-                done = s + self.t_buw
-                cu_t = done
-                reg_ready[0] = reg_ready[1] = done
-                stats["bu_word"] += 1
-                stats["bu_ops"] += 1
-            else:  # pragma: no cover
-                raise TypeError(cmd)
-
-            bus_t = s + self.t_bus
-            end_t = max(end_t, done)
-            if not self.pipelined:
-                serial_barrier = done
-
-        phase_ns[phase_name] = phase_ns.get(phase_name, 0.0) + (end_t - phase_start)
-        return TimingResult(ns=end_t, stats=dict(stats), phase_ns=phase_ns)
+        phase_ns[phase_name] = phase_ns.get(phase_name, 0.0) + (eng.end_t - phase_start)
+        return TimingResult(ns=eng.end_t, stats=dict(eng.stats), phase_ns=phase_ns)
 
 
 def simulate_ntt(
@@ -223,26 +285,29 @@ class MultiBankResult:
     speedup: float
     efficiency: float
     bus_utilization: float
+    analytic_latency_ns: float = 0.0  # lower-bound cross-check (see below)
+    policy: str = "rr"
 
 
-def simulate_multibank(n: int, banks: int, cfg: PimConfig | None = None) -> MultiBankResult:
-    """Bank-level parallelism under SHARED command-bus contention.
+def analytic_multibank_bound(
+    n: int, banks: int, cfg: PimConfig | None = None, single: TimingResult | None = None
+) -> float:
+    """Analytic LOWER bound on k-bank latency under shared-bus contention.
 
-    The paper (§VII) expects near-linear speedup from running independent
-    NTTs on independent banks, leaving the system-level check as future
-    work.  All banks in a channel share one command/address bus, and
-    NTT-PIM additionally streams (w0, r_w) parameters over it per CU op
-    (§IV-A), so the bus eventually serializes the banks:
+    All banks in a channel share one command/address bus, and NTT-PIM
+    additionally streams (w0, r_w) parameters over it per CU op (§IV-A),
+    so the bus eventually serializes the banks:
 
         latency(k) >= max( single_bank_latency,
                            k * bus_cycles_one_bank * t_cycle )
 
     where bus_cycles_one_bank = #commands + param_load_cycles * #CU-ops.
-    This lower-bound contention model is exact in the two asymptotes and
-    conservative in between (no inter-bank reordering credit).
+    Exact in the two asymptotes, conservative in between (no hazard
+    stalls charged to the bus); the cycle-level controller in
+    `repro.pimsys` can therefore never beat it.
     """
     cfg = cfg or PimConfig()
-    single = simulate_ntt(n, cfg)
+    single = single or simulate_ntt(n, cfg)
     st = single.stats
     n_cmds = sum(
         st.get(k, 0)
@@ -251,12 +316,49 @@ def simulate_multibank(n: int, banks: int, cfg: PimConfig | None = None) -> Mult
     )
     cu_ops = st.get("c1", 0) + st.get("c2", 0) + st.get("cmul", 0)
     bus_ns_one = (n_cmds + cfg.param_load_cycles * cu_ops) * cfg.dram_ns
-    latency = max(single.ns, banks * bus_ns_one)
+    return max(single.ns, banks * bus_ns_one)
+
+
+def simulate_multibank(
+    n: int,
+    banks: int,
+    cfg: PimConfig | None = None,
+    policy: str = "rr",
+    single: TimingResult | None = None,
+) -> MultiBankResult:
+    """Bank-level parallelism under SHARED command-bus contention.
+
+    The paper (§VII) expects near-linear speedup from running independent
+    NTTs on independent banks, leaving the system-level check as future
+    work.  This runs `banks` identical size-n NTT command streams through
+    the cycle-level channel controller (`repro.pimsys.controller`) — one
+    shared bus, per-bank `BankEngine` hazard tracking — and cross-checks
+    the result against `analytic_multibank_bound` (the controller must
+    never report a latency below the bound).  Pass `single` (the one-bank
+    `simulate_ntt(n, cfg)` result) when sweeping over `banks` to avoid
+    re-simulating the baseline each call."""
+    from repro.core.mapping import RowCentricMapper
+    from repro.pimsys.controller import ChannelController
+
+    cfg = cfg or PimConfig()
+    single = single or simulate_ntt(n, cfg)
+    ctrl = ChannelController(cfg, policy=policy)
+    cmds = RowCentricMapper(cfg, n).commands()
+    for i in range(banks):
+        ctrl.enqueue(ctrl.add_bank(), cmds, job_id=i)
+    ctrl.drain()
+    latency = ctrl.makespan_ns
+    analytic = analytic_multibank_bound(n, banks, cfg, single)
+    if latency < analytic - 1e-6:  # not an assert: must survive python -O
+        raise RuntimeError(
+            f"controller beat the analytic bus bound: {latency} < {analytic}")
     speedup = banks * single.ns / latency
     return MultiBankResult(
         banks=banks,
         latency_ns=latency,
         speedup=speedup,
         efficiency=speedup / banks,
-        bus_utilization=min(1.0, banks * bus_ns_one / latency),
+        bus_utilization=min(1.0, ctrl.bus_busy_ns / latency),
+        analytic_latency_ns=analytic,
+        policy=policy,
     )

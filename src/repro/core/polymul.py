@@ -11,7 +11,9 @@ Because the forward emits bit-reversed order and the pointwise product is
 element-wise, no bit-reversal commands are needed anywhere (§II-B).
 
 Bank-level parallelism: `polymul_batch` runs independent products on
-separate banks; latency is a single bank's (linear speedup, §I / §VII).
+separate banks through the device-level controller (`repro.pimsys`),
+which arbitrates the per-channel shared command bus — near-linear until
+the bus saturates (§I / §VII).
 """
 from __future__ import annotations
 
@@ -136,3 +138,19 @@ def pim_polymul(
 
     timing = BankTimer(cfg).simulate(cmds)
     return out, timing
+
+
+def polymul_batch(n: int, batch: int, cfg: PimConfig | None = None, policy: str = "rr"):
+    """Time `batch` independent products on the device-level controller.
+
+    One product per bank, banks contending on their channel's shared
+    command bus; requests beyond `cfg` topology capacity (num_channels x
+    num_ranks x num_banks) queue FIFO.  Returns the closed-loop
+    `repro.pimsys.SchedulerResult` (latency percentiles, throughput,
+    device stats).  Timing only — for functional output use `pim_polymul`.
+    """
+    from repro.pimsys.scheduler import PolymulJob, RequestScheduler
+
+    cfg = cfg or PimConfig()
+    sched = RequestScheduler(cfg, policy=policy)
+    return sched.run_closed_loop([PolymulJob(n)] * batch)

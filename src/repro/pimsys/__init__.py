@@ -1,0 +1,38 @@
+"""`repro.pimsys` — device-level PIM memory system (beyond the paper).
+
+The paper models one NTT-PIM bank; this package models the device around
+it: `topology` (channels × ranks × banks), `controller` (per-channel
+command-bus arbitration over `core.pimsim.BankEngine`), `scheduler`
+(request queue + closed/open-loop injection), `trace` (text record /
+replay), and `stats` (device-wide counters, bus utilization, energy).
+"""
+from repro.pimsys.controller import ChannelController, Completion, Device
+from repro.pimsys.scheduler import (
+    NttJob,
+    PolymulJob,
+    RequestScheduler,
+    SchedulerResult,
+    job_commands,
+)
+from repro.pimsys.stats import StatsRegistry
+from repro.pimsys.topology import BankAddress, DeviceTopology
+from repro.pimsys.trace import dump_trace, dumps_trace, load_trace, loads_trace, replay_trace
+
+__all__ = [
+    "BankAddress",
+    "ChannelController",
+    "Completion",
+    "Device",
+    "DeviceTopology",
+    "NttJob",
+    "PolymulJob",
+    "RequestScheduler",
+    "SchedulerResult",
+    "StatsRegistry",
+    "dump_trace",
+    "dumps_trace",
+    "job_commands",
+    "load_trace",
+    "loads_trace",
+    "replay_trace",
+]

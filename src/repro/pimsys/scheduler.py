@@ -1,0 +1,219 @@
+"""Request queue + batch scheduler for the PIM device.
+
+Accepts `NttJob` / `PolymulJob` requests, places each on a free bank
+(earliest-free bank first, which channel-interleaves via the topology's
+flat-id order), and injects them either
+
+  closed-loop  a fixed batch all present at t=0 (the paper's §VI-A
+               "multiple NTT functions using multiple banks" setting), or
+  open-loop    Poisson arrivals at a given rate (the serving regime the
+               ROADMAP's north star asks about),
+
+then reports per-request latency percentiles and device throughput.
+A bank serves one job at a time; jobs that find no free bank wait in a
+FIFO request queue.  Placement is greedy over *known-free* banks — the
+controller is advanced only up to each arrival's timestamp, so dispatch
+decisions never peek at future completions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.mapping import Command, RowCentricMapper
+from repro.core.pim_config import PimConfig
+from repro.core.polymul import polymul_commands
+from repro.pimsys.controller import Device
+from repro.pimsys.stats import StatsRegistry
+from repro.pimsys.topology import DeviceTopology
+
+
+# --------------------------------------------------------------------------
+# Requests
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NttJob:
+    """One size-n NTT (inverse by default, the paper's orientation)."""
+
+    n: int
+    forward: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class PolymulJob:
+    """One RLWE polynomial product: NTT(a), NTT(b), ⊙, INTT, scale."""
+
+    n: int
+
+
+Job = NttJob | PolymulJob
+
+
+def job_commands(cfg: PimConfig, job: Job) -> list[Command]:
+    if isinstance(job, NttJob):
+        return RowCentricMapper(cfg, job.n, forward=job.forward).commands()
+    if isinstance(job, PolymulJob):
+        return polymul_commands(cfg, job.n)[0]
+    raise TypeError(job)
+
+
+def job_rows(cfg: PimConfig, job: Job) -> int:
+    """Rows of bank storage the job's working set occupies."""
+    rows = max(1, job.n // cfg.row_words)
+    return rows if isinstance(job, NttJob) else 2 * rows  # polymul holds a AND b
+
+
+# --------------------------------------------------------------------------
+# Results
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SchedulerResult:
+    submitted: int
+    completed: int
+    makespan_ns: float
+    arrivals_ns: np.ndarray
+    dispatch_ns: np.ndarray
+    done_ns: np.ndarray
+    stats: StatsRegistry
+
+    @property
+    def latency_ns(self) -> np.ndarray:
+        return self.done_ns - self.arrivals_ns
+
+    @property
+    def queue_delay_ns(self) -> np.ndarray:
+        return self.dispatch_ns - self.arrivals_ns
+
+    def latency_percentiles_us(self, qs: Sequence[float] = (50, 95, 99)) -> dict:
+        if self.completed == 0:
+            return {f"p{int(q)}": 0.0 for q in qs}
+        lat = self.latency_ns / 1e3
+        return {f"p{int(q)}": float(np.percentile(lat, q)) for q in qs}
+
+    @property
+    def throughput_jobs_per_ms(self) -> float:
+        if self.makespan_ns <= 0:
+            return 0.0
+        return self.completed / (self.makespan_ns / 1e6)
+
+    def summary(self) -> dict:
+        out = {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "makespan_us": self.makespan_ns / 1e3,
+            "throughput_jobs_per_ms": self.throughput_jobs_per_ms,
+            "mean_queue_delay_us": (
+                float(self.queue_delay_ns.mean() / 1e3) if self.completed else 0.0),
+        }
+        out.update(self.latency_percentiles_us())
+        return out
+
+
+# --------------------------------------------------------------------------
+# Scheduler
+# --------------------------------------------------------------------------
+
+
+class RequestScheduler:
+    def __init__(self, cfg: PimConfig, topo: DeviceTopology | None = None,
+                 policy: str = "rr", pipelined: bool = True):
+        self.cfg = cfg
+        self.topo = topo or DeviceTopology.from_config(cfg)
+        self.policy = policy
+        self.pipelined = pipelined
+        self._cmd_cache: dict[Job, list[Command]] = {}
+
+    # -- injection frontends -------------------------------------------------
+    def run_closed_loop(self, jobs: Iterable[Job]) -> SchedulerResult:
+        """Fixed batch: all requests present at t=0."""
+        jobs = list(jobs)
+        return self._run([(0.0, j) for j in jobs])
+
+    def run_open_loop(self, jobs: Iterable[Job], rate_per_us: float,
+                      seed: int = 0) -> SchedulerResult:
+        """Poisson arrivals at `rate_per_us` requests/us (open loop)."""
+        jobs = list(jobs)
+        if rate_per_us <= 0:
+            raise ValueError("rate_per_us must be positive")
+        rng = np.random.default_rng(seed)
+        gaps_ns = rng.exponential(1e3 / rate_per_us, size=len(jobs))
+        arrivals = np.cumsum(gaps_ns)
+        return self._run(list(zip(arrivals.tolist(), jobs)))
+
+    # -- core event loop -----------------------------------------------------
+    def _commands(self, job: Job) -> list[Command]:
+        cmds = self._cmd_cache.get(job)
+        if cmds is None:
+            if job_rows(self.cfg, job) > self.cfg.rows_per_bank:
+                raise ValueError(f"{job} does not fit in one bank")
+            cmds = self._cmd_cache[job] = job_commands(self.cfg, job)
+        return cmds
+
+    def _run(self, arrivals: list[tuple[float, Job]]) -> SchedulerResult:
+        device = Device(self.cfg, self.topo, policy=self.policy,
+                        pipelined=self.pipelined)
+        topo = self.topo
+        pending = deque(sorted(arrivals, key=lambda p: p[0]))
+        free: list[tuple[float, int]] = [(0.0, b) for b in range(topo.total_banks)]
+        heapq.heapify(free)
+
+        n = len(arrivals)
+        t_arr = np.zeros(n)
+        t_disp = np.zeros(n)
+        t_done = np.zeros(n)
+        done_count = 0
+        jid = 0
+
+        def record(ev):
+            nonlocal done_count
+            t_done[ev.job_id] = ev.done
+            done_count += 1
+            flat = topo.flat_from_local(ev.channel, ev.bank)
+            heapq.heappush(free, (ev.done, flat))
+
+        while pending:
+            t, job = pending[0]
+            # surface every completion the device reaches before this arrival
+            while True:
+                evs = device.advance(horizon=t)
+                if evs is None:
+                    break
+                for ev in evs:
+                    record(ev)
+            if free:
+                pending.popleft()
+                ft, flat = heapq.heappop(free)
+                gate = max(t, ft)
+                t_arr[jid], t_disp[jid] = t, gate
+                device.enqueue_flat(flat, self._commands(job), gate=gate, job_id=jid)
+                jid += 1
+            else:
+                # all banks busy: advance until one completes
+                evs = device.advance()
+                if evs is None:  # pragma: no cover - free empty implies work queued
+                    raise RuntimeError("scheduler stalled with jobs in flight")
+                for ev in evs:
+                    record(ev)
+
+        for ev in device.drain():
+            record(ev)
+
+        if done_count != n:  # not an assert: must survive python -O
+            raise RuntimeError(f"conservation violated: {done_count} != {n}")
+        return SchedulerResult(
+            submitted=n,
+            completed=done_count,
+            makespan_ns=device.makespan_ns,
+            arrivals_ns=t_arr,
+            dispatch_ns=t_disp,
+            done_ns=t_done,
+            stats=device.stats(),
+        )

@@ -1,0 +1,85 @@
+"""Stats registry for the PIM memory system.
+
+Aggregates the per-bank command counters that `core.pimsim.BankEngine`
+produces, plus per-channel bus occupancy, into device-level views:
+per-bank, per-channel, and whole-device rollups, bus utilization, and
+energy via `core.pim_config.EnergyModel` (the same accounting as
+`TimingResult.energy_nj`, so single-bank numbers agree with the paper
+benchmarks).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from repro.core.pim_config import EnergyModel
+
+
+def merge_counts(dst: dict, src: dict) -> dict:
+    for k, v in src.items():
+        dst[k] = dst.get(k, 0) + v
+    return dst
+
+
+class StatsRegistry:
+    """Counters keyed by (channel, bank-within-channel)."""
+
+    def __init__(self):
+        self._bank: dict[tuple[int, int], dict] = defaultdict(dict)
+        self._bus_busy_ns: dict[int, float] = defaultdict(float)
+        self._bus_span_ns: dict[int, float] = defaultdict(float)
+
+    # -- recording -----------------------------------------------------------
+    def add_bank(self, channel: int, bank: int, counters: dict) -> None:
+        merge_counts(self._bank[(channel, bank)], counters)
+
+    def add_bus(self, channel: int, busy_ns: float, span_ns: float) -> None:
+        self._bus_busy_ns[channel] += busy_ns
+        self._bus_span_ns[channel] = max(self._bus_span_ns[channel], span_ns)
+
+    # -- views ---------------------------------------------------------------
+    def bank_counts(self, channel: int, bank: int) -> dict:
+        return dict(self._bank.get((channel, bank), {}))
+
+    def channel_counts(self, channel: int) -> dict:
+        out: dict = {}
+        for (ch, _), c in self._bank.items():
+            if ch == channel:
+                merge_counts(out, c)
+        return out
+
+    def device_counts(self) -> dict:
+        out: dict = {}
+        for c in self._bank.values():
+            merge_counts(out, c)
+        return out
+
+    def channels(self) -> list[int]:
+        return sorted({ch for ch, _ in self._bank} | set(self._bus_busy_ns))
+
+    def bus_utilization(self, channel: int) -> float:
+        span = self._bus_span_ns.get(channel, 0.0)
+        if span <= 0.0:
+            return 0.0
+        return min(1.0, self._bus_busy_ns[channel] / span)
+
+    def energy_nj(self, model: EnergyModel | None = None) -> float:
+        return (model or EnergyModel()).energy_nj(self.device_counts())
+
+    def summary(self, model: EnergyModel | None = None) -> dict:
+        """Flat dict for reports / benchmark `emit` lines."""
+        dev = self.device_counts()
+        per_ch = {
+            ch: {
+                "bus_utilization": self.bus_utilization(ch),
+                "commands": sum(
+                    v for k, v in self.channel_counts(ch).items()
+                    if k not in ("bu_ops", "refresh")
+                ),
+            }
+            for ch in self.channels()
+        }
+        return {
+            "device_counts": dev,
+            "energy_nj": self.energy_nj(model),
+            "per_channel": per_ch,
+        }

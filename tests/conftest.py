@@ -1,0 +1,8 @@
+"""Shared pytest configuration for the repro test suite."""
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (excluded from the smoke run via -m 'not slow')",
+    )

@@ -1,6 +1,7 @@
 """Core NTT library: oracles, identities, and property-based tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -4,6 +4,7 @@ All kernels run in interpret mode on CPU (the TPU lowering shares the
 same code path; see also the dry-run which .lower().compile()s them)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,302 @@
+"""Device-level memory system (`repro.pimsys`): controller equivalence vs
+`BankTimer`, scaling invariants vs the analytic bus bound, trace
+round-trips, and scheduler conservation."""
+import numpy as np
+import pytest
+
+from repro.core.mapping import Mark, RowCentricMapper
+from repro.core.pim_config import PimConfig
+from repro.core.pimsim import (
+    BankTimer,
+    analytic_multibank_bound,
+    simulate_multibank,
+    simulate_ntt,
+)
+from repro.core.polymul import polymul_batch, polymul_commands
+from repro.pimsys import (
+    ChannelController,
+    Device,
+    DeviceTopology,
+    NttJob,
+    PolymulJob,
+    RequestScheduler,
+    dumps_trace,
+    loads_trace,
+    replay_trace,
+)
+
+
+# ---------------------------------------------------------------------------
+# topology / address mapping
+# ---------------------------------------------------------------------------
+
+
+def test_topology_roundtrip():
+    topo = DeviceTopology(channels=4, ranks=2, banks_per_rank=4)
+    assert topo.total_banks == 32
+    seen = set()
+    for flat in range(topo.total_banks):
+        addr = topo.address_of(flat)
+        assert topo.flat_of(addr) == flat
+        assert topo.flat_from_local(addr.channel, topo.local_id(addr)) == flat
+        seen.add(addr)
+    assert len(seen) == 32
+    # channel-interleaved: consecutive flat ids hit different channels
+    assert topo.address_of(0).channel != topo.address_of(1).channel
+    with pytest.raises(IndexError):
+        topo.address_of(32)
+
+
+def test_topology_from_config():
+    cfg = PimConfig(num_channels=2, num_ranks=2, num_banks=8)
+    topo = DeviceTopology.from_config(cfg)
+    assert (topo.channels, topo.ranks, topo.banks_per_rank) == (2, 2, 8)
+    assert topo.banks_per_channel == 16
+
+
+# ---------------------------------------------------------------------------
+# controller: banks=1 must be bit-identical to the paper's single-bank timer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [256, 1024, 4096])
+@pytest.mark.parametrize("nb", [1, 2, 4, 6])
+@pytest.mark.parametrize("policy", ["rr", "ready"])
+def test_single_bank_bit_identical(n, nb, policy):
+    cfg = PimConfig(num_buffers=nb)
+    cmds = RowCentricMapper(cfg, n).commands()
+    ref = BankTimer(cfg).simulate(cmds)
+    ctrl = ChannelController(cfg, policy=policy)
+    b = ctrl.add_bank()
+    ctrl.enqueue(b, cmds, job_id="j0")
+    evs = ctrl.drain()
+    assert ctrl.bank_ns(b) == ref.ns  # exact ns, not approx
+    assert [e.job_id for e in evs] == ["j0"]
+    assert evs[0].done == ref.ns
+    assert dict(ctrl.engines[b].stats) == ref.stats
+
+
+def test_single_bank_polymul_bit_identical():
+    cfg = PimConfig(num_buffers=4)
+    cmds = polymul_commands(cfg, 1024)[0]
+    ref = BankTimer(cfg).simulate(cmds)
+    ctrl = ChannelController(cfg)
+    b = ctrl.add_bank()
+    ctrl.enqueue(b, cmds)
+    ctrl.drain()
+    assert ctrl.bank_ns(b) == ref.ns
+
+
+def test_unpipelined_single_bank_bit_identical():
+    cfg = PimConfig(num_buffers=2)
+    cmds = RowCentricMapper(cfg, 512).commands()
+    ref = BankTimer(cfg, pipelined=False).simulate(cmds)
+    ctrl = ChannelController(cfg)
+    b = ctrl.add_bank(pipelined=False)
+    ctrl.enqueue(b, cmds)
+    ctrl.drain()
+    assert ctrl.bank_ns(b) == ref.ns
+
+
+# ---------------------------------------------------------------------------
+# controller: scaling invariants
+# ---------------------------------------------------------------------------
+
+
+def test_multibank_monotone_and_bounded():
+    cfg = PimConfig(num_buffers=2)
+    n = 1024
+    single = simulate_ntt(n, cfg)
+    prev_speedup = 0.0
+    for banks in (1, 2, 4, 8):
+        r = simulate_multibank(n, banks, cfg)
+        # never beats the analytic shared-bus lower bound
+        assert r.latency_ns >= r.analytic_latency_ns - 1e-6
+        assert r.analytic_latency_ns == pytest.approx(
+            analytic_multibank_bound(n, banks, cfg))
+        # monotone speedup, never superlinear
+        assert r.speedup >= prev_speedup - 1e-9
+        assert r.speedup <= banks + 1e-9
+        assert r.latency_ns >= single.ns - 1e-9
+        prev_speedup = r.speedup
+
+
+def test_multibank_banks1_equals_single():
+    cfg = PimConfig(num_buffers=4)
+    r = simulate_multibank(2048, 1, cfg)
+    assert r.latency_ns == simulate_ntt(2048, cfg).ns  # exact
+
+
+def test_ready_policy_not_slower_when_banks_stall():
+    """Ready-first may reorder around banks stalled on tRAS/CU latency;
+    it must at least not lose to round-robin on homogeneous traffic."""
+    cfg = PimConfig(num_buffers=2)
+    rr = simulate_multibank(1024, 8, cfg, policy="rr")
+    rdy = simulate_multibank(1024, 8, cfg, policy="ready")
+    assert rdy.latency_ns <= rr.latency_ns * 1.05
+
+
+def test_heterogeneous_banks_on_one_bus():
+    """Different-sized jobs on one channel: makespan is bounded below by
+    the largest job alone and above by full serialization."""
+    cfg = PimConfig(num_buffers=2)
+    ctrl = ChannelController(cfg)
+    sizes = [256, 1024, 4096]
+    singles = []
+    for i, n in enumerate(sizes):
+        cmds = RowCentricMapper(cfg, n).commands()
+        singles.append(BankTimer(cfg).simulate(cmds).ns)
+        ctrl.enqueue(ctrl.add_bank(), cmds, job_id=i)
+    ctrl.drain()
+    assert ctrl.makespan_ns >= max(singles)
+    assert ctrl.makespan_ns <= sum(singles)
+
+
+# ---------------------------------------------------------------------------
+# trace record -> replay
+# ---------------------------------------------------------------------------
+
+
+def test_trace_roundtrip_exact():
+    cfg = PimConfig(num_buffers=4)
+    streams = {
+        (0, 0): RowCentricMapper(cfg, 512).commands(),
+        (1, 1): polymul_commands(cfg, 256)[0],
+        (0, 2): RowCentricMapper(PimConfig(num_buffers=1), 64).commands(),
+    }
+    text = dumps_trace(streams)
+    back = loads_trace(text)
+    assert back == {k: list(v) for k, v in streams.items()}
+    # idempotent: dump(load(dump(x))) == dump(x)
+    assert dumps_trace(back) == text
+
+
+def test_trace_replay_matches_live_timing():
+    cfg = PimConfig(num_buffers=2)
+    cmds = RowCentricMapper(cfg, 1024).commands()
+    live = ChannelController(cfg)
+    for _ in range(2):
+        live.enqueue(live.add_bank(), cmds)
+    live.drain()
+    dev = replay_trace(cfg, loads_trace(dumps_trace({(0, 0): cmds, (0, 1): cmds})))
+    assert dev.makespan_ns == live.makespan_ns
+
+
+def test_trace_skips_comments_and_preserves_marks():
+    text = "# comment\n\n0 0 ACT 7\n0 0 MARK inter:64\n0 0 RD 7 3 1\n"
+    streams = loads_trace(text)
+    assert len(streams[(0, 0)]) == 3
+    assert isinstance(streams[(0, 0)][1], Mark)
+    with pytest.raises(ValueError):
+        loads_trace("0 0 BOGUS 1\n")
+
+
+# ---------------------------------------------------------------------------
+# scheduler: conservation + queueing behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_conservation_closed_loop():
+    cfg = PimConfig(num_buffers=2, num_channels=2, num_banks=4)
+    res = RequestScheduler(cfg).run_closed_loop([NttJob(512)] * 20)
+    assert res.submitted == res.completed == 20
+    assert np.all(res.done_ns >= res.dispatch_ns)
+    assert np.all(res.dispatch_ns >= res.arrivals_ns)
+    assert res.throughput_jobs_per_ms > 0
+
+
+def test_scheduler_conservation_open_loop():
+    cfg = PimConfig(num_buffers=2, num_channels=2, num_banks=2)
+    jobs = [NttJob(512) if i % 2 else PolymulJob(256) for i in range(30)]
+    res = RequestScheduler(cfg).run_open_loop(jobs, rate_per_us=0.2, seed=11)
+    assert res.submitted == res.completed == 30
+    assert np.all(res.done_ns > res.arrivals_ns)
+    p = res.latency_percentiles_us()
+    assert p["p50"] <= p["p95"] <= p["p99"]
+
+
+def test_scheduler_open_loop_deterministic_by_seed():
+    cfg = PimConfig(num_buffers=2, num_banks=2)
+    jobs = [NttJob(256)] * 12
+    a = RequestScheduler(cfg).run_open_loop(jobs, rate_per_us=0.3, seed=5)
+    b = RequestScheduler(cfg).run_open_loop(jobs, rate_per_us=0.3, seed=5)
+    assert np.array_equal(a.done_ns, b.done_ns)
+    c = RequestScheduler(cfg).run_open_loop(jobs, rate_per_us=0.3, seed=6)
+    assert not np.array_equal(a.arrivals_ns, c.arrivals_ns)
+
+
+def test_scheduler_queue_delay_appears_when_oversubscribed():
+    """1 bank, many simultaneous jobs -> later jobs wait in the queue."""
+    cfg = PimConfig(num_buffers=2, num_banks=1)
+    res = RequestScheduler(cfg).run_closed_loop([NttJob(512)] * 4)
+    delays = np.sort(res.queue_delay_ns)
+    assert delays[0] == 0.0
+    assert delays[-1] > 0.0
+    # serial bank: makespan ~= 4x single job latency
+    single = simulate_ntt(512, cfg).ns
+    assert res.makespan_ns >= 4 * single - 1e-6
+
+
+def test_scheduler_more_banks_cut_latency():
+    cfg1 = PimConfig(num_buffers=2, num_banks=1)
+    cfg8 = PimConfig(num_buffers=2, num_banks=8)
+    jobs = [NttJob(512)] * 8
+    r1 = RequestScheduler(cfg1).run_closed_loop(jobs)
+    r8 = RequestScheduler(cfg8).run_closed_loop(jobs)
+    assert r8.makespan_ns < r1.makespan_ns
+    assert r8.latency_percentiles_us()["p99"] < r1.latency_percentiles_us()["p99"]
+
+
+def test_scheduler_rejects_oversized_job():
+    cfg = PimConfig(num_buffers=2, rows_per_bank=2)
+    with pytest.raises(ValueError):
+        RequestScheduler(cfg).run_closed_loop([PolymulJob(1024)])
+
+
+def test_polymul_batch_wrapper():
+    cfg = PimConfig(num_buffers=4, num_banks=4)
+    res = polymul_batch(512, batch=8, cfg=cfg)
+    assert res.completed == 8
+    dev = res.stats.device_counts()
+    assert dev["cmul"] > 0 and dev["act"] > 0
+
+
+# ---------------------------------------------------------------------------
+# stats registry
+# ---------------------------------------------------------------------------
+
+
+def test_stats_aggregation_and_energy():
+    cfg = PimConfig(num_buffers=2, num_channels=2, num_banks=2)
+    res = RequestScheduler(cfg).run_closed_loop([NttJob(1024)] * 4)
+    reg = res.stats
+    dev = reg.device_counts()
+    per_ch = [reg.channel_counts(ch) for ch in reg.channels()]
+    assert sum(c.get("act", 0) for c in per_ch) == dev["act"]
+    assert 0.0 < reg.bus_utilization(0) <= 1.0
+    # 4 identical NTTs -> device energy ~= 4x single-bank energy
+    single = simulate_ntt(1024, cfg)
+    assert reg.energy_nj() == pytest.approx(4 * single.energy_nj(), rel=1e-9)
+    s = reg.summary()
+    assert s["per_channel"][0]["commands"] > 0
+
+
+def test_device_multichannel_independent_buses():
+    """Same total banks: 2 channels x 1 bank beats 1 channel x 2 banks
+    (two private buses vs one shared), and equals two solo banks."""
+    cfg = PimConfig(num_buffers=2)
+    cmds = RowCentricMapper(cfg, 1024).commands()
+    single = BankTimer(cfg).simulate(cmds).ns
+
+    shared = ChannelController(cfg)
+    for i in range(2):
+        shared.enqueue(shared.add_bank(), cmds, job_id=i)
+    shared.drain()
+
+    dev = Device(cfg, DeviceTopology(channels=2, banks_per_rank=1))
+    dev.enqueue_flat(0, cmds, job_id=0)
+    dev.enqueue_flat(1, cmds, job_id=1)
+    dev.drain()
+
+    assert dev.makespan_ns == single  # private buses: no contention at all
+    assert shared.makespan_ns > dev.makespan_ns
