@@ -2,22 +2,25 @@
 
 The paper (§VII) expects near-linear speedup from multiple banks and
 leaves the system-level study to future work.  This benchmark runs the
-cycle-level `repro.pimsys` memory system three ways:
+cycle-level `repro.pimsys` memory system four ways:
 
   1. banks-per-channel sweep: cycle-level controller latency vs the
      analytic shared-bus lower bound (where does the bus knee appear?)
   2. channel sweep at fixed total banks: private buses vs shared bus
   3. open-loop serving: Poisson polymul arrivals, latency percentiles
      + throughput vs offered rate
+  4. (--sharded) ONE large NTT four-step-sharded over 2..32 banks
+     across channels: speedup and exchange-phase bus occupancy vs the
+     single-bank `BankTimer` baseline (`repro.pimsys.sharded`)
 
 Usage:
-    PYTHONPATH=src python -m benchmarks.multibank [--quick]
+    PYTHONPATH=src python -m benchmarks.multibank [--quick] [--sharded]
     PYTHONPATH=src python -m benchmarks.run --only multibank
 """
 import argparse
 
 from repro.core.pim_config import PimConfig
-from repro.core.pimsim import simulate_multibank, simulate_ntt
+from repro.core.pimsim import simulate_multibank, simulate_ntt, simulate_ntt_sharded
 from repro.pimsys import DeviceTopology, PolymulJob, RequestScheduler
 
 
@@ -76,6 +79,31 @@ def _rate_sweep(emit, n, topo, rates, jobs_per_rate):
         )
 
 
+def _sharded_sweep(emit, sizes, bank_counts, nbs, channels=4, banks_per_rank=8):
+    """One size-N NTT split over `banks` banks (vs `banks` independent
+    NTTs in `_bank_sweep`): the four-step decomposition's local passes
+    run bus-arbitrated per channel, the exchange stages cross channels."""
+    for n in sizes:
+        for nb in nbs:
+            cfg = PimConfig(num_buffers=nb, num_channels=channels,
+                            num_banks=banks_per_rank)
+            single = simulate_ntt(n, cfg)
+            for banks in bank_counts:
+                if n // banks < cfg.atom_words:
+                    continue
+                r = simulate_ntt_sharded(n, banks, cfg, single=single)
+                emit(
+                    f"sharded/N={n}/Nb={nb}/banks={banks}",
+                    r.latency_ns / 1e3,
+                    f"speedup=x{r.speedup:.2f};eff={r.efficiency:.2f};"
+                    f"local_us={r.local_ns / 1e3:.1f};"
+                    f"xchg_us={r.exchange_ns / 1e3:.1f};"
+                    f"xchg_bus_occ={r.exchange_bus_occupancy:.2f};"
+                    f"hops={r.xfer_hops};"
+                    f"single_us={r.single_ns / 1e3:.1f}",
+                )
+
+
 def run(emit, quick: bool = False):
     if quick:
         _bank_sweep(emit, sizes=[1024], bank_counts=[1, 2, 4, 8], nbs=(2,))
@@ -90,16 +118,31 @@ def run(emit, quick: bool = False):
                 rates=[0.02, 0.05, 0.1, 0.2], jobs_per_rate=32)
 
 
+def run_sharded(emit, quick: bool = False):
+    if quick:
+        _sharded_sweep(emit, sizes=[1024, 4096], bank_counts=[1, 2, 4, 8],
+                       nbs=(2,), channels=2, banks_per_rank=4)
+        return
+    _sharded_sweep(emit, sizes=[4096, 16384, 65536],
+                   bank_counts=[2, 4, 8, 16, 32], nbs=(2, 4))
+
+
 def main():
     from benchmarks.run import emit
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="small sweep for smoke tests (~seconds)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the sharded-NTT sweep instead of the "
+                         "independent-jobs sweeps")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    run(emit, quick=args.quick)
+    if args.sharded:
+        run_sharded(emit, quick=args.quick)
+    else:
+        run(emit, quick=args.quick)
 
 
 if __name__ == "__main__":

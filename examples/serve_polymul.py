@@ -73,8 +73,9 @@ def main():
     util = ", ".join(
         f"ch{ch}={res.stats.bus_utilization(ch):.2f}" for ch in res.stats.channels())
     print(f"  bus utilization: {util}")
+    per_job = res.stats.energy_nj() / res.completed if res.completed else 0.0
     print(f"  device energy {res.stats.energy_nj() / 1e3:.1f} uJ "
-          f"({res.stats.energy_nj() / res.completed:.0f} nJ/job)")
+          f"({per_job:.0f} nJ/job)")
 
     # -- closed-loop batch for comparison ---------------------------------
     res_cl = sched.run_closed_loop(jobs)

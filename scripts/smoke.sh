@@ -13,9 +13,13 @@ BENCH_TIMEOUT="${SMOKE_BENCH_TIMEOUT:-120}"
 
 echo "== smoke: fast tier-1 subset (-m 'not slow', ${TEST_TIMEOUT}s budget) =="
 timeout "${TEST_TIMEOUT}" python -m pytest -q -m "not slow" \
-    tests/test_core_ntt.py tests/test_pim_sim.py tests/test_pimsys.py
+    tests/test_core_ntt.py tests/test_pim_sim.py tests/test_pimsys.py \
+    tests/test_sharded.py tests/test_sharded_props.py
 
 echo "== smoke: device-level benchmark (--quick, ${BENCH_TIMEOUT}s budget) =="
 timeout "${BENCH_TIMEOUT}" python -m benchmarks.multibank --quick
+
+echo "== smoke: sharded-NTT benchmark (--sharded --quick, ${BENCH_TIMEOUT}s budget) =="
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.multibank --sharded --quick
 
 echo "smoke OK"

@@ -163,15 +163,26 @@ class RowCentricMapper:
     at `base_row` (row = base_row + i // R, atom = (i % R) // Na).
     The polynomial is in bit-reversed order for the inverse orientation
     and natural order for the forward one (paper: CPU does bit reversal).
+
+    `twiddle_base` offsets every emitted twiddle base (C1/C2/BUWord) by a
+    constant *global* word offset without moving the data: a size-n stream
+    with twiddle_base = b*n resolves its twiddles as words [b*n, (b+1)*n)
+    of a larger transform, which is exactly the local pass of bank b in a
+    sharded size-(B*n) NTT (`repro.pimsys.sharded`).  The MC realizes it
+    by programming shifted (w0, r_w) parameters; the command count and
+    memory traffic are untouched, so twiddle_base = 0 streams are
+    bit-identical to the unsharded mapper's.
     """
 
-    def __init__(self, cfg: PimConfig, n: int, forward: bool = False, base_row: int = 0):
+    def __init__(self, cfg: PimConfig, n: int, forward: bool = False, base_row: int = 0,
+                 twiddle_base: int = 0):
         if n & (n - 1):
             raise ValueError("n must be a power of two")
         self.cfg = cfg
         self.n = n
         self.forward = forward
         self.base_row = base_row
+        self.twiddle_base = twiddle_base
         self.Na = cfg.atom_words
         self.R = cfg.row_words
         if cfg.num_buffers >= 2:
@@ -243,7 +254,8 @@ class RowCentricMapper:
             out.append(ColRead(row, a, a % nb))
         for a in range(atoms):
             buf = a % nb
-            out.append(C1(buf, blk_base + a * self.Na, gs=not self.forward, stages_lo=lo, stages_hi=hi))
+            out.append(C1(buf, self.twiddle_base + blk_base + a * self.Na,
+                          gs=not self.forward, stages_lo=lo, stages_hi=hi))
             out.append(ColWrite(row, a, buf))
             nxt = a + depth
             if nxt < atoms:
@@ -277,7 +289,7 @@ class RowCentricMapper:
             out.append(ColRead(row, pairs[g] + ta, bv))
         for g, u_atom in enumerate(pairs):
             bu, bv = slot_bufs(g)
-            base = blk_base + u_atom * self.Na
+            base = self.twiddle_base + blk_base + u_atom * self.Na
             out.append(C2((bu,), (bv,), (base,), t, gs=not self.forward))
             out.append(ColWrite(row, u_atom, bu))
             out.append(ColWrite(row, u_atom + ta, bv))
@@ -327,7 +339,7 @@ class RowCentricMapper:
                     out.append(ColRead(row_u, a, bu))
                     bufs_u.append(bu)
                     bufs_v.append(bv)
-                    bases.append(r_u_idx * self.R + a * self.Na)
+                    bases.append(self.twiddle_base + r_u_idx * self.R + a * self.Na)
                 self._act(out, row_v)
                 for i, a in enumerate(atoms):
                     out.append(ColRead(row_v, a, bufs_v[i]))
@@ -358,7 +370,7 @@ class RowCentricMapper:
                     out.append(WordLoad(row_u, u % self.R, 0))
                     self._act(out, row_v)
                     out.append(WordLoad(row_v, v % self.R, 1))
-                    out.append(BUWord(u, t, gs=not self.forward))
+                    out.append(BUWord(self.twiddle_base + u, t, gs=not self.forward))
                     out.append(WordStore(row_v, v % self.R, 1))
                     self._act(out, row_u)
                     out.append(WordStore(row_u, u % self.R, 0))

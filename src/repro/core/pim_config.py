@@ -50,6 +50,15 @@ class PimConfig:
     tREFI_ns: float = 3900.0
     tRFC_ns: float = 260.0
 
+    # -- inter-bank exchange (repro.pimsys.sharded) -------------------------
+    # A sharded NTT moves atoms between banks over the per-channel shared
+    # bus: one atom (Na words) crosses as a burst of `xfer_beats_per_atom`
+    # bus beats (paired ColRead on the source / ColWrite on the target);
+    # crossing a channel boundary additionally costs `channel_hop_cycles`
+    # of hop latency (both channels' buses are held for the burst).
+    xfer_beats_per_atom: int = 4
+    channel_hop_cycles: int = 12
+
     @property
     def atom_words(self) -> int:  # Na
         return self.atom_bytes // self.word_bytes

@@ -319,6 +319,32 @@ def analytic_multibank_bound(
     return max(single.ns, banks * bus_ns_one)
 
 
+def simulate_ntt_sharded(
+    n: int,
+    banks: int,
+    cfg: PimConfig | None = None,
+    forward: bool = False,
+    policy: str = "rr",
+    topo=None,
+    single: TimingResult | None = None,
+):
+    """Time ONE size-n NTT sharded over `banks` banks (four-step split).
+
+    Unlike `simulate_multibank` (independent NTTs, one per bank), this
+    decomposes a single transform: per-bank N/banks-point local passes
+    plus log2(banks) cross-bank exchange stages over the per-channel
+    shared buses.  Delegates to `repro.pimsys.sharded.ShardedNttPlan`;
+    returns its `ShardedTimingResult`.  Pass `single` (the one-bank
+    `simulate_ntt(n, cfg, forward)` result) when sweeping over `banks`
+    to avoid re-simulating the baseline each call.
+    """
+    from repro.pimsys.sharded import ShardedNttPlan
+
+    cfg = cfg or PimConfig()
+    plan = ShardedNttPlan(cfg, n, banks, forward=forward, topo=topo)
+    return plan.simulate(policy=policy, single=single)
+
+
 def simulate_multibank(
     n: int,
     banks: int,

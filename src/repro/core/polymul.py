@@ -140,6 +140,36 @@ def pim_polymul(
     return out, timing
 
 
+def pim_ntt_sharded(
+    a: np.ndarray,
+    ctx: ntt_ref.NttContext,
+    cfg: PimConfig | None = None,
+    banks: int = 2,
+    forward: bool = False,
+    scale_n_inv: bool = True,
+    topo=None,
+):
+    """Execute one negacyclic NTT sharded over `banks` banks, bit-exactly.
+
+    The four-step split of `repro.pimsys.sharded`: each bank runs its
+    N/banks-point local `RowCentricMapper` stream (shifted twiddle bases)
+    on its own `FunctionalBank`, and the cross-bank stages apply the
+    shared-twiddle column butterflies between bank images.  Same
+    orientation/scaling conventions as `pim_ntt`; at banks=1 the two are
+    command-for-command identical.  Returns `(out, plan)` — time the
+    plan with `plan.simulate()`.
+    """
+    from repro.pimsys.sharded import ShardedNttPlan
+
+    cfg = cfg or PimConfig()
+    a = np.asarray(a, np.uint32)
+    plan = ShardedNttPlan(cfg, a.shape[0], banks, forward=forward, topo=topo)
+    out = plan.run_functional(a, ctx)
+    if not forward and scale_n_inv:
+        out = np.asarray(mm.np_mulmod(out, ctx.n_inv, ctx.q), np.uint32)
+    return out, plan
+
+
 def polymul_batch(n: int, batch: int, cfg: PimConfig | None = None, policy: str = "rr"):
     """Time `batch` independent products on the device-level controller.
 

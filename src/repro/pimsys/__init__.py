@@ -12,7 +12,14 @@ from repro.pimsys.scheduler import (
     PolymulJob,
     RequestScheduler,
     SchedulerResult,
+    ShardedNttJob,
     job_commands,
+)
+from repro.pimsys.sharded import (
+    ExchangePair,
+    ExchangeStage,
+    ShardedNttPlan,
+    ShardedTimingResult,
 )
 from repro.pimsys.stats import StatsRegistry
 from repro.pimsys.topology import BankAddress, DeviceTopology
@@ -24,10 +31,15 @@ __all__ = [
     "Completion",
     "Device",
     "DeviceTopology",
+    "ExchangePair",
+    "ExchangeStage",
     "NttJob",
     "PolymulJob",
     "RequestScheduler",
     "SchedulerResult",
+    "ShardedNttJob",
+    "ShardedNttPlan",
+    "ShardedTimingResult",
     "StatsRegistry",
     "dump_trace",
     "dumps_trace",

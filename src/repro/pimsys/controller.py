@@ -98,6 +98,28 @@ class ChannelController:
         if job is not None:
             job.remaining += n
 
+    def occupy_bus(self, not_before: float, hold_ns: float) -> float:
+        """Grant the shared bus for a non-command transaction (an inter-bank
+        atom burst: the paired ColRead/ColWrite transfer a sharded NTT's
+        exchange phase rides on — see `repro.pimsys.sharded`).  Returns the
+        grant time; the bus is busy for `hold_ns` from there."""
+        s = max(not_before, self.bus_free)
+        self.bus_free = s + hold_ns
+        self.bus_busy_ns += hold_ns
+        return s
+
+    def issue_direct(self, bank: int, cmd: Command,
+                     not_before: float = 0.0) -> tuple[float, float]:
+        """Issue one command on `bank` outside the queued arbitration path
+        (the sharded exchange phase drives engines directly), with exactly
+        the bus-grant bookkeeping `advance` applies.  Returns (start, done)."""
+        eng = self.engines[bank]
+        s, done = eng.issue(cmd, max(not_before, self.bus_free))
+        self.bus_free = s + eng.t_bus
+        self.bus_busy_ns += eng.bus_hold(cmd)
+        self.issued += 1
+        return s, done
+
     # -- arbitration ---------------------------------------------------------
     def _grant_time(self, bank: int) -> float:
         q = self.queues[bank]

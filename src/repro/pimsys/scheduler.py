@@ -11,14 +11,24 @@ flat-id order), and injects them either
 
 then reports per-request latency percentiles and device throughput.
 A bank serves one job at a time; jobs that find no free bank wait in a
-FIFO request queue.  Placement is greedy over *known-free* banks — the
-controller is advanced only up to each arrival's timestamp, so dispatch
-decisions never peek at future completions.
+FIFO request queue.  Placement is greedy over known bank-release times:
+before dispatching, the controller is advanced up to the k-th best
+known release (the horizon past which further progress cannot improve
+this dispatch), so a bank completing sooner than a parked reservation
+is always preferred — but dispatch never peeks past that horizon at
+completions that could not matter.
+
+`ShardedNttJob` coexists in the same FIFO: it gang-reserves `banks`
+banks (waiting at the head until that many are free) and runs the
+four-step sharded plan of `repro.pimsys.sharded` on them; see its
+docstring for the reservation approximation.  Gang specs are validated
+(shard size, bank count, topology fit) before any simulation starts.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from collections import deque
 from typing import Iterable, Sequence
 
@@ -52,7 +62,27 @@ class PolymulJob:
     n: int
 
 
-Job = NttJob | PolymulJob
+@dataclasses.dataclass(frozen=True)
+class ShardedNttJob:
+    """ONE size-n NTT gang-scheduled over `banks` banks at once.
+
+    Dispatched when `banks` banks are free (FIFO order is preserved, so
+    a gang job at the head waits — classic head-of-line gang blocking —
+    while single-bank jobs behind it keep their arrival order).  The
+    reserved gang runs the four-step sharded plan of
+    `repro.pimsys.sharded` on the banks it was placed on; during the
+    reservation the gang's channels are modeled as dedicated to it (a
+    sharded job's bus traffic does not interleave with concurrent
+    single-bank jobs' — the reservation approximation, noted here
+    because it slightly favors the gang under mixed load).
+    """
+
+    n: int
+    banks: int = 2
+    forward: bool = False
+
+
+Job = NttJob | PolymulJob | ShardedNttJob
 
 
 def job_commands(cfg: PimConfig, job: Job) -> list[Command]:
@@ -60,11 +90,17 @@ def job_commands(cfg: PimConfig, job: Job) -> list[Command]:
         return RowCentricMapper(cfg, job.n, forward=job.forward).commands()
     if isinstance(job, PolymulJob):
         return polymul_commands(cfg, job.n)[0]
+    if isinstance(job, ShardedNttJob):
+        raise TypeError(
+            "ShardedNttJob spans banks and has no single-bank command "
+            "stream; use ShardedNttPlan(...).local_streams() instead")
     raise TypeError(job)
 
 
 def job_rows(cfg: PimConfig, job: Job) -> int:
-    """Rows of bank storage the job's working set occupies."""
+    """Rows of bank storage the job's working set occupies (per bank)."""
+    if isinstance(job, ShardedNttJob):
+        return max(1, (job.n // job.banks) // cfg.row_words)
     rows = max(1, job.n // cfg.row_words)
     return rows if isinstance(job, NttJob) else 2 * rows  # polymul holds a AND b
 
@@ -130,6 +166,11 @@ class RequestScheduler:
         self.policy = policy
         self.pipelined = pipelined
         self._cmd_cache: dict[Job, list[Command]] = {}
+        # sharded-plan timing cache: only the shard count, orientation and
+        # the gang's per-shard channel placement affect the latency.
+        # Values are (latency_ns, per-shard counters, per-channel bus
+        # busy ns, device counters) — see _sharded_latency.
+        self._sharded_cache: dict[tuple, tuple[float, list, dict, dict]] = {}
 
     # -- injection frontends -------------------------------------------------
     def run_closed_loop(self, jobs: Iterable[Job]) -> SchedulerResult:
@@ -157,7 +198,52 @@ class RequestScheduler:
             cmds = self._cmd_cache[job] = job_commands(self.cfg, job)
         return cmds
 
+    def _sharded_latency(self, job: ShardedNttJob, flats: Sequence[int]):
+        """Latency + stats of a gang job on the banks it was placed on.
+
+        Simulated on an idle clone of the device (the gang reservation —
+        see `ShardedNttJob`); cached by the placement's channel pattern,
+        which is all the plan's timing depends on.  Counters are cached
+        PER SHARD (not as a registry keyed to the first placement's
+        banks) so a later gang with the same channel pattern but
+        different banks attributes its work to the banks it actually
+        ran on.  Returns (latency_ns, per_shard_counters, per_channel
+        bus busy, device counters).
+        """
+        from repro.pimsys.sharded import ShardedNttPlan
+
+        key = (job.n, job.banks, job.forward,
+               tuple(self.topo.channel_of(f) for f in flats))
+        hit = self._sharded_cache.get(key)
+        if hit is None:
+            plan = ShardedNttPlan(self.cfg, job.n, job.banks,
+                                  forward=job.forward, topo=self.topo,
+                                  flat_banks=flats)
+            r = plan.simulate(policy=self.policy, baseline=False,
+                              pipelined=self.pipelined)
+            shard_counters = []
+            for f in flats:
+                addr = self.topo.address_of(f)
+                shard_counters.append(
+                    r.stats.bank_counts(addr.channel, self.topo.local_id(addr)))
+            bus_busy = {ch: r.stats.bus_busy_ns(ch) for ch in r.stats.channels()}
+            dev = {"xfer_atoms": r.xfer_atoms, "xfer_hops": r.xfer_hops}
+            hit = self._sharded_cache[key] = (
+                r.latency_ns, shard_counters, bus_busy, dev)
+        return hit
+
+    def _validate_gang(self, job: ShardedNttJob) -> None:
+        """Fail fast on an unsatisfiable gang spec — the plan constructor
+        holds the single copy of the rules (power-of-two banks and n,
+        shard >= one atom, row fit, topology fit, buffer count)."""
+        from repro.pimsys.sharded import ShardedNttPlan
+
+        ShardedNttPlan(self.cfg, job.n, job.banks, forward=job.forward,
+                       topo=self.topo)
+
     def _run(self, arrivals: list[tuple[float, Job]]) -> SchedulerResult:
+        for job in {j for _, j in arrivals if isinstance(j, ShardedNttJob)}:
+            self._validate_gang(job)
         device = Device(self.cfg, self.topo, policy=self.policy,
                         pipelined=self.pipelined)
         topo = self.topo
@@ -171,6 +257,9 @@ class RequestScheduler:
         t_done = np.zeros(n)
         done_count = 0
         jid = 0
+        gang_makespan = 0.0
+        # (flats, per-shard counters, per-channel bus busy, device counters)
+        gang_stats: list[tuple] = []
 
         def record(ev):
             nonlocal done_count
@@ -179,8 +268,12 @@ class RequestScheduler:
             flat = topo.flat_from_local(ev.channel, ev.bank)
             heapq.heappush(free, (ev.done, flat))
 
+        def need(job: Job) -> int:
+            return job.banks if isinstance(job, ShardedNttJob) else 1
+
         while pending:
             t, job = pending[0]
+            k = need(job)
             # surface every completion the device reaches before this arrival
             while True:
                 evs = device.advance(horizon=t)
@@ -188,32 +281,78 @@ class RequestScheduler:
                     break
                 for ev in evs:
                     record(ev)
-            if free:
-                pending.popleft()
-                ft, flat = heapq.heappop(free)
-                gate = max(t, ft)
-                t_arr[jid], t_disp[jid] = t, gate
-                device.enqueue_flat(flat, self._commands(job), gate=gate, job_id=jid)
-                jid += 1
-            else:
-                # all banks busy: advance until one completes
-                evs = device.advance()
-                if evs is None:  # pragma: no cover - free empty implies work queued
-                    raise RuntimeError("scheduler stalled with jobs in flight")
+            # Advance past any in-flight completion that beats the release
+            # times currently known in `free`: gang reservations park their
+            # banks in the heap with FUTURE timestamps, and a busy bank may
+            # complete sooner than those — the k-th best known release is
+            # exactly the horizon beyond which more device progress can't
+            # improve this dispatch.  The horizon is only recomputed when a
+            # completion changes `free` (advance issues ONE command per call
+            # and usually completes nothing), and the common k=1 case reads
+            # the heap minimum instead of scanning.
+            horizon_stale = True
+            while True:
+                if horizon_stale:
+                    if len(free) >= k:
+                        horizon = free[0][0] if k == 1 else \
+                            heapq.nsmallest(k, free)[-1][0]
+                    else:
+                        horizon = math.inf
+                    horizon_stale = False
+                if len(free) >= k and horizon <= t:
+                    break
+                evs = device.advance(horizon=horizon)
+                if evs is None:
+                    if len(free) < k:  # pragma: no cover - deficit implies work queued
+                        raise RuntimeError("scheduler stalled with jobs in flight")
+                    break
                 for ev in evs:
                     record(ev)
+                    horizon_stale = True
+            pending.popleft()
+            picked = [heapq.heappop(free) for _ in range(k)]
+            gate = max(t, max(ft for ft, _ in picked))
+            t_arr[jid], t_disp[jid] = t, gate
+            if isinstance(job, ShardedNttJob):
+                # gang reservation: the plan runs on its own sub-device
+                # timeline; the banks rejoin the pool at completion
+                flats = [f for _, f in picked]
+                dur, shard_counters, bus_busy, dev_c = self._sharded_latency(job, flats)
+                done = gate + dur
+                t_done[jid] = done
+                done_count += 1
+                gang_makespan = max(gang_makespan, done)
+                gang_stats.append((flats, shard_counters, bus_busy, dev_c))
+                for f in flats:
+                    heapq.heappush(free, (done, f))
+            else:
+                device.enqueue_flat(picked[0][1], self._commands(job),
+                                    gate=gate, job_id=jid)
+            jid += 1
 
         for ev in device.drain():
             record(ev)
 
         if done_count != n:  # not an assert: must survive python -O
             raise RuntimeError(f"conservation violated: {done_count} != {n}")
+        stats = device.stats()
+        for flats, shard_counters, bus_busy, dev_c in gang_stats:
+            for f, counters in zip(flats, shard_counters):
+                addr = topo.address_of(f)
+                stats.add_bank(addr.channel, topo.local_id(addr), counters)
+            for ch, busy in bus_busy.items():
+                stats.add_bus(ch, busy, 0.0)
+            stats.add_device(dev_c)
+        makespan = max(device.makespan_ns, gang_makespan)
+        # gang sub-device spans are gang-relative; the utilization
+        # denominator must be the whole run
+        stats.extend_span(makespan)
         return SchedulerResult(
             submitted=n,
             completed=done_count,
-            makespan_ns=device.makespan_ns,
+            makespan_ns=makespan,
             arrivals_ns=t_arr,
             dispatch_ns=t_disp,
             done_ns=t_done,
-            stats=device.stats(),
+            stats=stats,
         )

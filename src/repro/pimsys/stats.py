@@ -27,6 +27,7 @@ class StatsRegistry:
         self._bank: dict[tuple[int, int], dict] = defaultdict(dict)
         self._bus_busy_ns: dict[int, float] = defaultdict(float)
         self._bus_span_ns: dict[int, float] = defaultdict(float)
+        self._device: dict = {}
 
     # -- recording -----------------------------------------------------------
     def add_bank(self, channel: int, bank: int, counters: dict) -> None:
@@ -35,6 +36,16 @@ class StatsRegistry:
     def add_bus(self, channel: int, busy_ns: float, span_ns: float) -> None:
         self._bus_busy_ns[channel] += busy_ns
         self._bus_span_ns[channel] = max(self._bus_span_ns[channel], span_ns)
+
+    def add_device(self, counters: dict) -> None:
+        """Counters with no per-bank home (e.g. the sharded exchange's
+        `xfer_atoms` / `xfer_hops` inter-bank bursts)."""
+        merge_counts(self._device, counters)
+
+    def extend_span(self, span_ns: float) -> None:
+        """Stretch every channel's observation window to `span_ns`."""
+        for ch in self.channels():
+            self._bus_span_ns[ch] = max(self._bus_span_ns[ch], span_ns)
 
     # -- views ---------------------------------------------------------------
     def bank_counts(self, channel: int, bank: int) -> dict:
@@ -51,10 +62,14 @@ class StatsRegistry:
         out: dict = {}
         for c in self._bank.values():
             merge_counts(out, c)
+        merge_counts(out, self._device)
         return out
 
     def channels(self) -> list[int]:
         return sorted({ch for ch, _ in self._bank} | set(self._bus_busy_ns))
+
+    def bus_busy_ns(self, channel: int) -> float:
+        return self._bus_busy_ns.get(channel, 0.0)
 
     def bus_utilization(self, channel: int) -> float:
         span = self._bus_span_ns.get(channel, 0.0)

@@ -92,6 +92,10 @@ class DeviceTopology:
         """Inverse of (address_of, local_id): channel + in-channel id -> flat."""
         return local * self.channels + channel
 
+    def channel_of(self, flat: int) -> int:
+        """Channel owning flat bank id (the bus a transfer to/from it holds)."""
+        return self.address_of(flat).channel
+
     def describe(self) -> str:
         return (f"{self.channels}ch x {self.ranks}rk x {self.banks_per_rank}ba "
                 f"= {self.total_banks} banks "

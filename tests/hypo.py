@@ -1,0 +1,31 @@
+"""Shared hypothesis boilerplate for the property-based test modules.
+
+Importing this module from a test file replaces the per-file
+
+    pytest.importorskip("hypothesis", ...)
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+stanza: `importorskip` raises pytest's Skipped at *import* time, so any
+module doing ``from hypo import given, settings, st`` is skipped as a
+whole when hypothesis is absent — identical behaviour, one copy.
+
+It also installs the suite-wide settings profile once: no deadline
+(simulator- and interpreter-heavy properties routinely blow the 200 ms
+default), so individual tests only state what varies (`max_examples`).
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
+
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+settings.register_profile(
+    "repro",
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.load_profile("repro")
+
+__all__ = ["HealthCheck", "given", "settings", "st"]

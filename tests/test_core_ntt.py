@@ -1,9 +1,7 @@
 """Core NTT library: oracles, identities, and property-based tests."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypo import given, settings, st
 
 from repro.core import modmath as mm
 from repro.core import ntt
@@ -22,14 +20,14 @@ def rand_poly(n, rng=RNG):
 
 
 @given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=200)
 def test_mulhi_u32(a, b):
     got = int(np.asarray(mm.mulhi_u32(np.uint32(a), np.uint32(b))))
     assert got == (a * b) >> 32
 
 
 @given(st.integers(0, Q - 1), st.integers(0, Q - 1))
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=200)
 def test_mont_mul(a, b):
     qp, _, r2 = mm.mont_params(Q)
     got = int(np.asarray(mm.mont_mul_u32(np.uint32(a), np.uint32(b), Q, qp)))
@@ -38,7 +36,7 @@ def test_mont_mul(a, b):
 
 
 @given(st.integers(0, Q - 1), st.integers(0, Q - 1))
-@settings(max_examples=200, deadline=None)
+@settings(max_examples=200)
 def test_shoup_mul(a, w):
     wsh = mm.shoup(w, Q)
     got = int(np.asarray(mm.shoup_mulmod_u32(np.uint32(a), np.uint32(w), np.uint32(wsh), Q)))
@@ -46,7 +44,7 @@ def test_shoup_mul(a, w):
 
 
 @given(st.integers(0, Q - 1), st.integers(0, Q - 1))
-@settings(max_examples=100, deadline=None)
+@settings(max_examples=100)
 def test_addsub_mod(a, b):
     assert int(np.asarray(mm.addmod_u32(np.uint32(a), np.uint32(b), Q))) == (a + b) % Q
     assert int(np.asarray(mm.submod_u32(np.uint32(a), np.uint32(b), Q))) == (a - b) % Q
@@ -125,7 +123,7 @@ def test_jnp_matches_numpy():
 
 
 @given(st.sampled_from([16, 64, 256]), st.integers(0, 2**31))
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=25)
 def test_ntt_linearity(n, seed):
     """NTT(alpha*a + b) == alpha*NTT(a) + NTT(b)  (transform linearity)."""
     rng = np.random.default_rng(seed)
@@ -138,7 +136,7 @@ def test_ntt_linearity(n, seed):
 
 
 @given(st.sampled_from([16, 64]), st.integers(0, 2**31))
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=25)
 def test_polymul_commutative_and_unit(n, seed):
     rng = np.random.default_rng(seed)
     ctx = ntt.make_context(Q, n)

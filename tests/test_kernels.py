@@ -4,9 +4,7 @@ All kernels run in interpret mode on CPU (the TPU lowering shares the
 same code path; see also the dry-run which .lower().compile()s them)."""
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypo import given, settings, st
 
 from repro.core import modmath as mm
 from repro.core.ntt import make_context, schoolbook_negacyclic
@@ -143,7 +141,7 @@ def test_ntt_conv_fixedpoint_close_to_direct():
 
 
 @given(st.sampled_from([256, 1024]), st.integers(0, 2**31 - 1))
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=10)
 def test_kernel_linearity(n, seed):
     rng = np.random.default_rng(seed)
     ctx = make_context(Q, n)
@@ -157,7 +155,7 @@ def test_kernel_linearity(n, seed):
 
 
 @given(st.integers(0, 2**31 - 1))
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=10)
 def test_kernel_delta_transform(seed):
     """NTT(delta_0) = all-ones (psi^0 * w^0 = 1 in every output)."""
     n = 512

@@ -6,9 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis", reason="property-based tests need hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypo import given, settings, st
 
 from repro.configs.registry import get_config
 from repro.models import layers as L
@@ -71,7 +69,7 @@ def test_moe_local_tight_capacity_drop_semantics():
 
 
 @given(st.integers(0, 2**31 - 1))
-@settings(max_examples=8, deadline=None)
+@settings(max_examples=8)
 def test_moe_local_property_random_inputs(seed):
     """Property: local dispatch == scatter for random inputs/weights."""
     with _fp32_layers():

@@ -1,0 +1,75 @@
+"""Hypothesis property twin of `test_sharded.py`'s functional layer.
+
+Random q-compatible sizes, bank counts in {2, 4, 8} and random inputs:
+the sharded path must match the `core.ntt` reference EXACTLY, forward
+and inverse, and round-trip to the identity.  Skips as a module when
+hypothesis is absent (the `hypo` shim), like every property module in
+the suite; `test_sharded.py` keeps a deterministic grid running either
+way.
+"""
+import numpy as np
+from hypo import given, settings, st
+
+from repro.core import modmath as mm
+from repro.core import ntt
+from repro.core.pim_config import PimConfig
+from repro.core.polymul import pim_ntt_sharded
+
+Q = mm.DEFAULT_Q
+
+# Property tests can't take the function-scoped `small_pim_cfg` fixture
+# (hypothesis health check); they share this module-level twin instead.
+CFG = PimConfig(num_buffers=2, num_channels=2, num_banks=2)
+
+
+def rand_poly(n, seed):
+    return np.random.default_rng(seed).integers(0, Q, n).astype(np.uint32)
+
+
+@given(st.sampled_from([64, 128, 256, 512, 1024]), st.sampled_from([2, 4, 8]),
+       st.integers(0, 2**31))
+@settings(max_examples=15)
+def test_sharded_inverse_matches_reference(n, banks, seed):
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly(n, seed)
+    got, _ = pim_ntt_sharded(a, ctx, CFG, banks=banks)
+    assert np.array_equal(got, ntt.ntt_inverse_np(a, ctx))
+
+
+@given(st.sampled_from([64, 128, 256, 512, 1024]), st.sampled_from([2, 4, 8]),
+       st.integers(0, 2**31))
+@settings(max_examples=15)
+def test_sharded_forward_matches_reference(n, banks, seed):
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly(n, seed)
+    got, _ = pim_ntt_sharded(a, ctx, CFG, banks=banks, forward=True)
+    assert np.array_equal(got, ntt.ntt_forward_np(a, ctx))
+
+
+@given(st.sampled_from([64, 256, 512]), st.sampled_from([2, 4, 8]),
+       st.integers(0, 2**31))
+@settings(max_examples=10)
+def test_sharded_roundtrip(n, banks, seed):
+    """INTT(NTT(x)) == x with BOTH transforms on the sharded path."""
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly(n, seed)
+    fwd, _ = pim_ntt_sharded(a, ctx, CFG, banks=banks, forward=True)
+    back, _ = pim_ntt_sharded(fwd, ctx, CFG, banks=banks, forward=False)
+    assert np.array_equal(back, a)
+
+
+@given(st.sampled_from([2, 4, 8]), st.integers(0, 2**31))
+@settings(max_examples=10)
+def test_sharded_linearity(banks, seed):
+    """NTT(alpha*a + b) == alpha*NTT(a) + NTT(b) through the shards."""
+    n = 256
+    rng = np.random.default_rng(seed)
+    ctx = ntt.make_context(Q, n)
+    a, b = rand_poly(n, seed), rand_poly(n, seed + 1)
+    alpha = int(rng.integers(1, Q))
+    mixed = np.asarray(mm.np_addmod(mm.np_mulmod(a, alpha, Q), b, Q), np.uint32)
+    lhs, _ = pim_ntt_sharded(mixed, ctx, CFG, banks=banks, forward=True)
+    fa, _ = pim_ntt_sharded(a, ctx, CFG, banks=banks, forward=True)
+    fb, _ = pim_ntt_sharded(b, ctx, CFG, banks=banks, forward=True)
+    rhs = mm.np_addmod(mm.np_mulmod(fa, alpha, Q), fb, Q)
+    assert np.array_equal(lhs.astype(np.int64), rhs)
