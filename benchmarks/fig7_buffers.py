@@ -5,7 +5,7 @@ vs software); (ii) one auxiliary buffer improves by an order of
 magnitude; (iii) further buffers give ~1.5-2.5x, more at larger N.
 """
 from repro.core.pim_config import PimConfig
-from repro.core.pimsim import simulate_ntt
+from repro.pimsys.session import NttOp, PimSession
 
 NS = [256, 512, 1024, 2048, 4096, 8192, 16384]
 NBS = [1, 2, 3, 4, 6, 8]
@@ -13,9 +13,11 @@ NBS = [1, 2, 3, 4, 6, 8]
 
 def run(emit):
     table = {}
+    sessions = {nb: PimSession(PimConfig(num_buffers=nb)) for nb in NBS}
     for n in NS:
         for nb in NBS:
-            res = simulate_ntt(n, PimConfig(num_buffers=nb))
+            sess = sessions[nb]
+            res = sess.run(sess.compile(NttOp(n))).timing
             table[(n, nb)] = res
             emit(
                 f"fig7/N={n}/Nb={nb}",

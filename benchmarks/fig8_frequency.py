@@ -3,7 +3,7 @@
 DRAM timing is fixed in ns; only the CU clock scales.  Paper: dropping
 1200 -> 300 MHz slows large-N NTT by only ~1.65x (DRAM-dominated)."""
 from repro.core.pim_config import PimConfig
-from repro.core.pimsim import simulate_ntt
+from repro.pimsys.session import NttOp, PimSession
 
 FREQS = [300, 600, 900, 1200]
 NS = [1024, 4096, 16384]
@@ -11,10 +11,13 @@ NS = [1024, 4096, 16384]
 
 def run(emit):
     out = {}
+    sessions = {f: PimSession(PimConfig(num_buffers=2, cu_clock_mhz=float(f)))
+                for f in FREQS}
     for n in NS:
         base = None
         for f in FREQS[::-1]:
-            res = simulate_ntt(n, PimConfig(num_buffers=2, cu_clock_mhz=float(f)))
+            sess = sessions[f]
+            res = sess.run(sess.compile(NttOp(n))).timing
             out[(n, f)] = res
             if f == 1200:
                 base = res

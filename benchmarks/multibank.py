@@ -1,8 +1,10 @@
 """Beyond-paper: device-level scaling of NTT-PIM under shared-bus traffic.
 
 The paper (§VII) expects near-linear speedup from multiple banks and
-leaves the system-level study to future work.  This benchmark runs the
-cycle-level `repro.pimsys` memory system four ways:
+leaves the system-level study to future work.  This benchmark drives the
+cycle-level `repro.pimsys` memory system four ways, all through the
+compile/execute session API (`repro.pimsys.session.PimSession` — one
+compiled plan per sweep, replayed across points):
 
   1. banks-per-channel sweep: cycle-level controller latency vs the
      analytic shared-bus lower bound (where does the bus knee appear?)
@@ -13,25 +15,31 @@ cycle-level `repro.pimsys` memory system four ways:
      across channels: speedup and exchange-phase bus occupancy vs the
      single-bank `BankTimer` baseline (`repro.pimsys.sharded`)
 
+`--json PATH` additionally writes every sweep point as machine-readable
+JSON (runtime plus the parsed derived metrics: speedup, efficiency, bus
+occupancy, ...) so the perf trajectory is tracked across PRs; smoke.sh
+regenerates `BENCH_multibank.json`, which is committed — the simulator
+is deterministic, so a diff in that file IS a perf change.
+
 Usage:
-    PYTHONPATH=src python -m benchmarks.multibank [--quick] [--sharded]
+    PYTHONPATH=src python -m benchmarks.multibank [--quick] [--sharded] \
+        [--json BENCH_multibank.json]
     PYTHONPATH=src python -m benchmarks.run --only multibank
 """
 import argparse
+import json
 
 from repro.core.pim_config import PimConfig
-from repro.core.pimsim import simulate_multibank, simulate_ntt, simulate_ntt_sharded
-from repro.pimsys import DeviceTopology, PolymulJob, RequestScheduler
+from repro.pimsys import BatchOp, DeviceTopology, NttOp, PimSession, PolymulOp, ShardedNttOp
 
 
 def _bank_sweep(emit, sizes, bank_counts, nbs):
     for n in sizes:
         for nb in nbs:
-            cfg = PimConfig(num_buffers=nb)
-            single = simulate_ntt(n, cfg)
+            sess = PimSession(PimConfig(num_buffers=nb))
             knee = None
             for banks in bank_counts:
-                r = simulate_multibank(n, banks, cfg, single=single)
+                r = sess.run(sess.compile(BatchOp(NttOp(n), banks))).timing
                 emit(
                     f"multibank/N={n}/Nb={nb}/banks={banks}",
                     r.latency_ns / 1e3,
@@ -42,18 +50,17 @@ def _bank_sweep(emit, sizes, bank_counts, nbs):
                 if knee is None and r.efficiency < 0.95:
                     knee = banks
             emit(f"multibank/N={n}/Nb={nb}/knee", 0.0,
-                 f"linear_until~{(knee or max(bank_counts) + 1) // 2}banks")
+                 f"linear_until={(knee or max(bank_counts) + 1) // 2}banks")
 
 
 def _channel_sweep(emit, n, total_banks, channel_counts, nb):
-    single = simulate_ntt(n, PimConfig(num_buffers=nb)).ns
+    single = PimSession(PimConfig(num_buffers=nb)).baseline(n).ns
     for ch in channel_counts:
         if total_banks % ch:
             continue
-        cfg = PimConfig(num_buffers=nb, num_channels=ch,
-                        num_banks=total_banks // ch)
-        res = RequestScheduler(cfg).run_closed_loop(
-            [PolymulJob(n)] * total_banks)
+        sess = PimSession(PimConfig(num_buffers=nb, num_channels=ch,
+                                    num_banks=total_banks // ch))
+        res = sess.submit(sess.compile(PolymulOp(n)), count=total_banks).timing
         emit(
             f"multibank/channels/N={n}/banks={total_banks}/ch={ch}",
             res.makespan_ns / 1e3,
@@ -64,11 +71,12 @@ def _channel_sweep(emit, n, total_banks, channel_counts, nb):
 
 
 def _rate_sweep(emit, n, topo, rates, jobs_per_rate):
-    cfg = PimConfig(num_buffers=4, num_channels=topo.channels,
-                    num_banks=topo.banks_per_rank)
+    sess = PimSession(PimConfig(num_buffers=4, num_channels=topo.channels,
+                                num_banks=topo.banks_per_rank))
+    plan = sess.compile(PolymulOp(n))
     for rate in rates:
-        res = RequestScheduler(cfg).run_open_loop(
-            [PolymulJob(n)] * jobs_per_rate, rate_per_us=rate, seed=0)
+        res = sess.submit(plan, count=jobs_per_rate,
+                          rate_per_us=rate, seed=0).timing
         p = res.latency_percentiles_us()
         emit(
             f"multibank/openloop/N={n}/{topo.channels}ch x{topo.banks_per_rank}ba/rate={rate}",
@@ -85,13 +93,12 @@ def _sharded_sweep(emit, sizes, bank_counts, nbs, channels=4, banks_per_rank=8):
     run bus-arbitrated per channel, the exchange stages cross channels."""
     for n in sizes:
         for nb in nbs:
-            cfg = PimConfig(num_buffers=nb, num_channels=channels,
-                            num_banks=banks_per_rank)
-            single = simulate_ntt(n, cfg)
+            sess = PimSession(PimConfig(num_buffers=nb, num_channels=channels,
+                                        num_banks=banks_per_rank))
             for banks in bank_counts:
-                if n // banks < cfg.atom_words:
+                if n // banks < sess.cfg.atom_words:
                     continue
-                r = simulate_ntt_sharded(n, banks, cfg, single=single)
+                r = sess.run(sess.compile(ShardedNttOp(n, banks))).timing
                 emit(
                     f"sharded/N={n}/Nb={nb}/banks={banks}",
                     r.latency_ns / 1e3,
@@ -127,6 +134,43 @@ def run_sharded(emit, quick: bool = False):
                    bank_counts=[2, 4, 8, 16, 32], nbs=(2, 4))
 
 
+# --------------------------------------------------------------------------
+# machine-readable output (--json): the cross-PR perf trajectory artifact
+# --------------------------------------------------------------------------
+
+
+def _parse_derived(derived: str) -> dict:
+    """'speedup=x3.8;eff=0.95;hops=12' -> {speedup: 3.8, eff: 0.95, ...}."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        num = v.lstrip("x")
+        for unit in ("jobs_ms", "us", "banks"):
+            if num.endswith(unit):
+                num = num[: -len(unit)]
+                break
+        try:
+            out[k] = float(num)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def collecting_emit(emit, records: list):
+    """Wrap an emit callback so every sweep point is also captured as a
+    structured record (name, runtime, parsed derived metrics)."""
+
+    def wrapped(name: str, us_per_call: float, derived: str = ""):
+        emit(name, us_per_call, derived)
+        row = {"name": name, "us_per_call": us_per_call}
+        row.update(_parse_derived(derived))
+        records.append(row)
+
+    return wrapped
+
+
 def main():
     from benchmarks.run import emit
 
@@ -136,13 +180,32 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="run the sharded-NTT sweep instead of the "
                          "independent-jobs sweeps")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every sweep point as JSON "
+                         "(e.g. BENCH_multibank.json)")
     args = ap.parse_args()
+
+    records: list = []
+    sink = collecting_emit(emit, records) if args.json else emit
 
     print("name,us_per_call,derived")
     if args.sharded:
-        run_sharded(emit, quick=args.quick)
+        run_sharded(sink, quick=args.quick)
     else:
-        run(emit, quick=args.quick)
+        run(sink, quick=args.quick)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {
+                    "benchmark": "multibank",
+                    "quick": args.quick,
+                    "sharded": args.sharded,
+                    "points": records,
+                },
+                f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(records)} sweep points to {args.json}")
 
 
 if __name__ == "__main__":

@@ -16,8 +16,8 @@ import numpy as np
 from repro.core import modmath as mm
 from repro.core import ntt
 from repro.core.pim_config import PimConfig
-from repro.core.polymul import pim_polymul
 from repro.kernels import ops
+from repro.pimsys import PimSession, PolymulOp
 
 
 def main():
@@ -33,8 +33,9 @@ def main():
     b = rng.integers(0, q, (args.batch, args.n)).astype(np.uint32)
 
     # -- PIM path: one product per bank; latency = single bank (parallel) --
-    cfg = PimConfig(num_buffers=args.nb)
-    out0, timing = pim_polymul(a[0], b[0], ctx, cfg)
+    sess = PimSession(PimConfig(num_buffers=args.nb))
+    r = sess.run(sess.compile(PolymulOp(args.n)), a[0], b[0], ctx=ctx)
+    out0, timing = r.value, r.timing
     expect0 = ntt.polymul_negacyclic_np(a[0], b[0], ctx)
     assert np.array_equal(out0, expect0)
     print(f"[pim] polymul N={args.n}, Nb={args.nb}: {timing.us:.1f} us/bank, "

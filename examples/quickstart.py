@@ -10,10 +10,9 @@ import numpy as np
 
 from repro.core import modmath as mm
 from repro.core import ntt
-from repro.core.mapping import pim_ntt
 from repro.core.pim_config import PimConfig
-from repro.core.pimsim import simulate_ntt
 from repro.kernels.ntt import ntt_pallas
+from repro.pimsys import NttOp, PimSession
 
 N = 2048
 Q = mm.DEFAULT_Q
@@ -27,15 +26,15 @@ def main():
     # 1. reference
     ref = ntt.ntt_forward_np(poly, ctx)
 
-    # 2. PIM: functional command-stream execution + timing
-    cfg = PimConfig(num_buffers=4)
-    got_pim, commands = pim_ntt(poly, ctx, cfg, forward=True)
-    timing = simulate_ntt(N, cfg, forward=True)
-    assert np.array_equal(got_pim, ref), "PIM functional mismatch!"
-    print(f"[pim] N={N}: {len(commands)} DRAM commands, "
-          f"{timing.us:.2f} us simulated on one HBM2E bank "
-          f"({timing.stats['act']} row activations, Nb=4), "
-          f"energy ~{timing.energy_nj():.1f} nJ")
+    # 2. PIM: compile once, then one run gives functional output + timing
+    sess = PimSession(PimConfig(num_buffers=4))
+    plan = sess.compile(NttOp(N, forward=True))
+    r = sess.run(plan, poly, ctx=ctx)
+    assert np.array_equal(r.value, ref), "PIM functional mismatch!"
+    print(f"[pim] N={N}: {len(plan.commands)} DRAM commands, "
+          f"{r.timing.us:.2f} us simulated on one HBM2E bank "
+          f"({r.timing.stats['act']} row activations, Nb=4), "
+          f"energy ~{r.timing.energy_nj():.1f} nJ")
 
     # 3. TPU kernel (batched = bank-level parallelism)
     batch = np.stack([poly] * 8)

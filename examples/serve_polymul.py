@@ -1,9 +1,23 @@
 """Serve batched RLWE polynomial products on a PIM device, end to end.
 
-Demonstrates the full `repro.pimsys` stack for the ROADMAP's serving
-question: open-loop Poisson traffic of `PolymulJob` requests scheduled
-onto a channels x banks device, with a functional spot-check that the
-command streams being timed also compute the right polynomial product.
+Demonstrates the full `repro.pimsys` stack — through the session API —
+for the ROADMAP's serving question: open-loop Poisson traffic of polymul
+requests scheduled onto a channels x banks device, with a functional
+spot-check that the command stream being timed also computes the right
+polynomial product.
+
+Compile once, run many (the session execution model)::
+
+    sess = PimSession(cfg, policy="rr")
+    plan = sess.compile(PolymulOp(n))      # mapper + twiddle params, ONCE
+    r = sess.run(plan, a, b)               # functional + single-bank timing
+    open_loop = sess.submit(plan, count=64, rate_per_us=0.1)  # serve
+    closed = sess.submit(plan, count=64)                      # batch
+    r.trace.dump("out.trace")              # replayable command artifact
+
+Every downstream run/submit replays the frozen plan: zero mapper or
+twiddle-parameter regeneration (the paper's precomputed (w0, r_w)
+streams, amortized across the whole serving session).
 
     PYTHONPATH=src python examples/serve_polymul.py \
         --n 1024 --channels 2 --banks 4 --jobs 64 --rate 0.1
@@ -20,13 +34,7 @@ import numpy as np
 from repro.core import modmath as mm
 from repro.core import ntt
 from repro.core.pim_config import PimConfig
-from repro.core.polymul import pim_polymul, polymul_commands
-from repro.pimsys import (
-    DeviceTopology,
-    PolymulJob,
-    RequestScheduler,
-    dump_trace,
-)
+from repro.pimsys import PimSession, PolymulOp
 
 
 def main():
@@ -39,13 +47,19 @@ def main():
     ap.add_argument("--rate", type=float, default=0.1, help="arrivals per us (open loop)")
     ap.add_argument("--policy", choices=("rr", "ready"), default="rr")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--trace", default=None, help="write the per-bank command trace here")
+    ap.add_argument("--trace", default=None, help="write the compiled command trace here")
     args = ap.parse_args()
 
     cfg = PimConfig(num_buffers=args.nb, num_channels=args.channels,
                     num_banks=args.banks)
-    topo = DeviceTopology.from_config(cfg)
-    print(f"device: {topo.describe()}, Nb={args.nb}, policy={args.policy}")
+    sess = PimSession(cfg, policy=args.policy)
+    print(f"device: {sess.topo.describe()}, Nb={args.nb}, policy={args.policy}")
+
+    # -- compile ONCE: every run below replays this frozen plan -----------
+    plan = sess.compile(PolymulOp(args.n))
+    print(f"compiled plan: {len(plan.commands)} commands, "
+          f"{len(plan.twiddle_params)} CU-op twiddle-parameter programs, "
+          f"rows a@{plan.placement['row_a']} b@{plan.placement['row_b']}")
 
     # -- functional spot-check: the same commands we are about to time
     #    actually compute a * b in Z_q[X]/(X^N + 1) ----------------------
@@ -54,14 +68,13 @@ def main():
     rng = np.random.default_rng(args.seed)
     a = rng.integers(0, q, args.n).astype(np.uint32)
     b = rng.integers(0, q, args.n).astype(np.uint32)
-    out, single = pim_polymul(a, b, ctx, cfg)
-    assert np.array_equal(out, ntt.polymul_negacyclic_np(a, b, ctx))
-    print(f"functional check OK; single-bank polymul latency {single.us:.1f} us")
+    single = sess.run(plan, a, b, ctx=ctx)
+    assert np.array_equal(single.value, ntt.polymul_negacyclic_np(a, b, ctx))
+    print(f"functional check OK; single-bank polymul latency {single.timing.us:.1f} us")
 
-    # -- open-loop serving ------------------------------------------------
-    sched = RequestScheduler(cfg, topo, policy=args.policy)
-    jobs = [PolymulJob(args.n)] * args.jobs
-    res = sched.run_open_loop(jobs, rate_per_us=args.rate, seed=args.seed)
+    # -- open-loop serving: the SAME plan, queued through the scheduler ---
+    res = sess.submit(plan, count=args.jobs,
+                      rate_per_us=args.rate, seed=args.seed).timing
     p = res.latency_percentiles_us()
     offered = args.rate * 1e3
     print(f"[open loop] {res.completed}/{res.submitted} jobs @ {args.rate}/us "
@@ -78,20 +91,24 @@ def main():
           f"({per_job:.0f} nJ/job)")
 
     # -- closed-loop batch for comparison ---------------------------------
-    res_cl = sched.run_closed_loop(jobs)
+    res_cl = sess.submit(plan, count=args.jobs).timing
     print(f"[closed loop] batch={args.jobs}: makespan {res_cl.makespan_ns / 1e3:.1f} us, "
           f"throughput {res_cl.throughput_jobs_per_ms:.1f} jobs/ms, "
           f"p99 {res_cl.latency_percentiles_us()['p99']:.1f} us")
 
     if args.trace:
+        # one batch wave of the compiled plan, bank-placed like the
+        # scheduler's first dispatch round
         streams = {}
-        cmds = polymul_commands(cfg, args.n)[0]
-        for flat in range(min(args.jobs, topo.total_banks)):
-            addr = topo.address_of(flat)
-            streams[(addr.channel, topo.local_id(addr))] = cmds
+        for flat in range(min(args.jobs, sess.topo.total_banks)):
+            addr = sess.topo.address_of(flat)
+            streams[(addr.channel, sess.topo.local_id(addr))] = list(plan.commands)
+        from repro.pimsys import dump_trace
+
         dump_trace(streams, args.trace)
         print(f"wrote command trace for one batch wave to {args.trace}")
 
+    print(f"plan cache: {sess.plan_misses} compile(s), {sess.plan_hits} hit(s)")
     print("serve_polymul OK")
 
 

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Fast regression smoke: tier-1 subset + device-level benchmark, each under
-# a wall-clock timeout so simulator runtime regressions fail loudly.
+# Fast regression smoke: tier-1 subset + device-level benchmark + serving
+# example, each under a wall-clock timeout so simulator runtime
+# regressions fail loudly.
 #
 #   ./scripts/smoke.sh            # defaults: 300s tests, 120s benchmark
 #   SMOKE_TEST_TIMEOUT=600 ./scripts/smoke.sh
@@ -14,12 +15,24 @@ BENCH_TIMEOUT="${SMOKE_BENCH_TIMEOUT:-120}"
 echo "== smoke: fast tier-1 subset (-m 'not slow', ${TEST_TIMEOUT}s budget) =="
 timeout "${TEST_TIMEOUT}" python -m pytest -q -m "not slow" \
     tests/test_core_ntt.py tests/test_pim_sim.py tests/test_pimsys.py \
-    tests/test_sharded.py tests/test_sharded_props.py
+    tests/test_sharded.py tests/test_sharded_props.py \
+    tests/test_session.py tests/test_session_props.py
 
-echo "== smoke: device-level benchmark (--quick, ${BENCH_TIMEOUT}s budget) =="
-timeout "${BENCH_TIMEOUT}" python -m benchmarks.multibank --quick
+echo "== smoke: device-level benchmark (--quick --json, ${BENCH_TIMEOUT}s budget) =="
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.multibank --quick \
+    --json BENCH_multibank.json
 
 echo "== smoke: sharded-NTT benchmark (--sharded --quick, ${BENCH_TIMEOUT}s budget) =="
 timeout "${BENCH_TIMEOUT}" python -m benchmarks.multibank --sharded --quick
+
+echo "== smoke: serve_polymul example over the session API (${BENCH_TIMEOUT}s budget) =="
+timeout "${BENCH_TIMEOUT}" python examples/serve_polymul.py \
+    --n 512 --channels 2 --banks 2 --jobs 16 --rate 0.05
+
+echo "== smoke: legacy shims emit exactly one DeprecationWarning =="
+# the canonical assertion lives in tests/test_session.py; rerun just it so
+# a shim regression fails this named leg loudly even if someone trims the
+# pytest selection above
+timeout 60 python -m pytest -q tests/test_session.py -k "legacy_shim_warns or session_api_emits_no_warnings"
 
 echo "smoke OK"

@@ -130,6 +130,17 @@ Command = Act | ColRead | ColWrite | C1 | C2 | CMul | WordLoad | WordStore | BUW
 # Stage plan helpers
 # --------------------------------------------------------------------------
 
+#: Count of `RowCentricMapper.commands()` materializations since import.
+#: The session layer (`repro.pimsys.session`) compiles each mapper stream
+#: once per `CompiledPlan`; tests snapshot this counter around a repeated
+#: `run()` to prove the cached plan performs zero mapper regeneration.
+MAPPER_GENERATIONS = 0
+
+
+def mapper_generations() -> int:
+    """Current value of the module-wide mapper-generation counter."""
+    return MAPPER_GENERATIONS
+
 
 def stage_strides(n: int, forward: bool) -> list[int]:
     """Butterfly strides in execution order.
@@ -205,6 +216,8 @@ class RowCentricMapper:
 
     # -- emission -----------------------------------------------------------
     def commands(self) -> list[Command]:
+        global MAPPER_GENERATIONS
+        MAPPER_GENERATIONS += 1
         self._open_row = None
         out: list[Command] = []
         strides = stage_strides(self.n, self.forward)

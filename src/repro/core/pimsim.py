@@ -264,18 +264,42 @@ class BankTimer:
         return TimingResult(ns=eng.end_t, stats=dict(eng.stats), phase_ns=phase_ns)
 
 
+def _time_ntt(
+    n: int,
+    cfg: PimConfig | None = None,
+    forward: bool = False,
+    pipelined: bool = True,
+) -> TimingResult:
+    """Map + time one size-n NTT on one bank (no functional execution).
+
+    Internal, warning-free baseline used by the analytic bound and the
+    sharded plan; external callers go through `simulate_ntt` (a session
+    shim) or `PimSession` directly.
+    """
+    from repro.core.mapping import RowCentricMapper
+
+    cfg = cfg or PimConfig()
+    cmds = RowCentricMapper(cfg, n, forward=forward).commands()
+    return BankTimer(cfg, pipelined=pipelined).simulate(cmds)
+
+
 def simulate_ntt(
     n: int,
     cfg: PimConfig | None = None,
     forward: bool = False,
     pipelined: bool = True,
 ) -> TimingResult:
-    """Map + time one size-n NTT on one bank (no functional execution)."""
-    from repro.core.mapping import RowCentricMapper
+    """Map + time one size-n NTT on one bank (no functional execution).
 
-    cfg = cfg or PimConfig()
-    cmds = RowCentricMapper(cfg, n, forward=forward).commands()
-    return BankTimer(cfg, pipelined=pipelined).simulate(cmds)
+    Legacy shim over `repro.pimsys.session.PimSession` — bit-identical
+    to the session path by construction (same mapper stream, same
+    `BankTimer`).
+    """
+    from repro.pimsys.session import NttOp, PimSession, warn_legacy
+
+    warn_legacy("simulate_ntt", "run(compile(NttOp(n)))")
+    sess = PimSession(cfg, pipelined=pipelined)
+    return sess.run(sess.compile(NttOp(n, forward=forward))).timing
 
 
 @dataclasses.dataclass
@@ -307,7 +331,7 @@ def analytic_multibank_bound(
     `repro.pimsys` can therefore never beat it.
     """
     cfg = cfg or PimConfig()
-    single = single or simulate_ntt(n, cfg)
+    single = single or _time_ntt(n, cfg)
     st = single.stats
     n_cmds = sum(
         st.get(k, 0)
@@ -333,16 +357,18 @@ def simulate_ntt_sharded(
     Unlike `simulate_multibank` (independent NTTs, one per bank), this
     decomposes a single transform: per-bank N/banks-point local passes
     plus log2(banks) cross-bank exchange stages over the per-channel
-    shared buses.  Delegates to `repro.pimsys.sharded.ShardedNttPlan`;
-    returns its `ShardedTimingResult`.  Pass `single` (the one-bank
-    `simulate_ntt(n, cfg, forward)` result) when sweeping over `banks`
-    to avoid re-simulating the baseline each call.
-    """
-    from repro.pimsys.sharded import ShardedNttPlan
+    shared buses.  Returns a `ShardedTimingResult`.  Pass `single` (the
+    one-bank `simulate_ntt(n, cfg, forward)` result) when sweeping over
+    `banks` to avoid re-simulating the baseline each call.
 
-    cfg = cfg or PimConfig()
-    plan = ShardedNttPlan(cfg, n, banks, forward=forward, topo=topo)
-    return plan.simulate(policy=policy, single=single)
+    Legacy shim over `repro.pimsys.session.PimSession`.
+    """
+    from repro.pimsys.session import PimSession, ShardedNttOp, warn_legacy
+
+    warn_legacy("simulate_ntt_sharded", "run(compile(ShardedNttOp(n, banks)))")
+    sess = PimSession(cfg, topo=topo, policy=policy)
+    plan = sess.compile(ShardedNttOp(n, banks, forward=forward))
+    return sess.run(plan, single=single).timing
 
 
 def simulate_multibank(
@@ -362,29 +388,12 @@ def simulate_multibank(
     the result against `analytic_multibank_bound` (the controller must
     never report a latency below the bound).  Pass `single` (the one-bank
     `simulate_ntt(n, cfg)` result) when sweeping over `banks` to avoid
-    re-simulating the baseline each call."""
-    from repro.core.mapping import RowCentricMapper
-    from repro.pimsys.controller import ChannelController
+    re-simulating the baseline each call.
 
-    cfg = cfg or PimConfig()
-    single = single or simulate_ntt(n, cfg)
-    ctrl = ChannelController(cfg, policy=policy)
-    cmds = RowCentricMapper(cfg, n).commands()
-    for i in range(banks):
-        ctrl.enqueue(ctrl.add_bank(), cmds, job_id=i)
-    ctrl.drain()
-    latency = ctrl.makespan_ns
-    analytic = analytic_multibank_bound(n, banks, cfg, single)
-    if latency < analytic - 1e-6:  # not an assert: must survive python -O
-        raise RuntimeError(
-            f"controller beat the analytic bus bound: {latency} < {analytic}")
-    speedup = banks * single.ns / latency
-    return MultiBankResult(
-        banks=banks,
-        latency_ns=latency,
-        speedup=speedup,
-        efficiency=speedup / banks,
-        bus_utilization=min(1.0, ctrl.bus_busy_ns / latency),
-        analytic_latency_ns=analytic,
-        policy=policy,
-    )
+    Legacy shim over `repro.pimsys.session.PimSession`."""
+    from repro.pimsys.session import BatchOp, NttOp, PimSession, warn_legacy
+
+    warn_legacy("simulate_multibank", "run(compile(BatchOp(NttOp(n), banks)))")
+    sess = PimSession(cfg, policy=policy)
+    plan = sess.compile(BatchOp(NttOp(n), banks))
+    return sess.run(plan, single=single).timing

@@ -19,21 +19,18 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import modmath as mm
 from repro.core import ntt as ntt_ref
 from repro.core.mapping import (
     Act,
-    C2,
     CMul,
     ColRead,
     ColWrite,
     Command,
-    FunctionalBank,
     Mark,
     RowCentricMapper,
 )
 from repro.core.pim_config import PimConfig
-from repro.core.pimsim import BankTimer, TimingResult
+from repro.core.pimsim import TimingResult
 
 
 def pointwise_commands(cfg: PimConfig, n: int, row_a: int, row_b: int) -> list[Command]:
@@ -97,16 +94,32 @@ def scaling_commands(cfg: PimConfig, n: int, row_a: int) -> list[Command]:
     return out
 
 
-def polymul_commands(cfg: PimConfig, n: int, row_a: int = 0, row_b: int | None = None):
+def polymul_phases(cfg: PimConfig, n: int, row_a: int = 0,
+                   row_b: int | None = None) -> tuple[dict[str, list[Command]], int]:
+    """The canonical polymul phase layout, in execution order.
+
+    Single source of truth for both the flat timed stream
+    (`polymul_commands`) and the session's per-phase functional execution
+    (`repro.pimsys.session` compiles the dict into its `CompiledPlan`).
+    Returns `(phases, row_b)`; concatenating the dict values in insertion
+    order IS the timed command stream.
+    """
     R = cfg.row_words
     rows = max(1, n // R)
     row_b = row_b if row_b is not None else row_a + rows
-    fwd_a = RowCentricMapper(cfg, n, forward=True, base_row=row_a).commands()
-    fwd_b = RowCentricMapper(cfg, n, forward=True, base_row=row_b).commands()
-    point = pointwise_commands(cfg, n, row_a, row_b)
-    inv_a = RowCentricMapper(cfg, n, forward=False, base_row=row_a).commands()
-    scale = scaling_commands(cfg, n, row_a)
-    return fwd_a + fwd_b + point + inv_a + scale, row_b
+    phases = {
+        "fwd_a": RowCentricMapper(cfg, n, forward=True, base_row=row_a).commands(),
+        "fwd_b": RowCentricMapper(cfg, n, forward=True, base_row=row_b).commands(),
+        "pointwise": pointwise_commands(cfg, n, row_a, row_b),
+        "inv_a": RowCentricMapper(cfg, n, forward=False, base_row=row_a).commands(),
+        "scale": scaling_commands(cfg, n, row_a),
+    }
+    return phases, row_b
+
+
+def polymul_commands(cfg: PimConfig, n: int, row_a: int = 0, row_b: int | None = None):
+    phases, row_b = polymul_phases(cfg, n, row_a, row_b)
+    return [c for cmds in phases.values() for c in cmds], row_b
 
 
 def pim_polymul(
@@ -115,29 +128,17 @@ def pim_polymul(
     ctx: ntt_ref.NttContext,
     cfg: PimConfig | None = None,
 ) -> tuple[np.ndarray, TimingResult]:
-    """Functional + timed polynomial multiplication on one bank."""
-    cfg = cfg or PimConfig()
-    n = a.shape[0]
-    cmds, row_b = polymul_commands(cfg, n)
+    """Functional + timed polynomial multiplication on one bank.
 
-    # functional execution needs per-phase butterfly orientation: the
-    # FunctionalBank resolves twiddles by direction, so run phase-wise.
-    bank_f = FunctionalBank(cfg, ctx, forward=True)
-    bank_f.load_poly(np.asarray(a, np.uint32), base_row=0)
-    bank_f.load_poly(np.asarray(b, np.uint32), base_row=row_b)
-    fwd_a = RowCentricMapper(cfg, n, forward=True, base_row=0).commands()
-    fwd_b = RowCentricMapper(cfg, n, forward=True, base_row=row_b).commands()
-    bank_f.run(fwd_a)
-    bank_f.run(fwd_b)
-    bank_f.run(pointwise_commands(cfg, n, 0, row_b))
-    bank_i = FunctionalBank(cfg, ctx, forward=False)
-    bank_i.mem = bank_f.mem  # share the memory image
-    bank_i.run(RowCentricMapper(cfg, n, forward=False, base_row=0).commands())
-    out = bank_i.read_poly(n)
-    out = np.asarray(mm.np_mulmod(out, ctx.n_inv, ctx.q), np.uint32)
+    Legacy shim over `repro.pimsys.session.PimSession` (compile once,
+    run many); bit-identical values, cycles, and command lists.
+    """
+    from repro.pimsys.session import PimSession, PolymulOp, warn_legacy
 
-    timing = BankTimer(cfg).simulate(cmds)
-    return out, timing
+    warn_legacy("pim_polymul", "run(compile(PolymulOp(n)), a, b)")
+    sess = PimSession(cfg)
+    r = sess.run(sess.compile(PolymulOp(a.shape[0])), a, b, ctx=ctx)
+    return r.value, r.timing
 
 
 def pim_ntt_sharded(
@@ -158,16 +159,19 @@ def pim_ntt_sharded(
     orientation/scaling conventions as `pim_ntt`; at banks=1 the two are
     command-for-command identical.  Returns `(out, plan)` — time the
     plan with `plan.simulate()`.
-    """
-    from repro.pimsys.sharded import ShardedNttPlan
 
-    cfg = cfg or PimConfig()
+    Legacy shim over `repro.pimsys.session.PimSession`; the returned
+    plan is the compiled artifact's `ShardedNttPlan`.
+    """
+    from repro.pimsys.session import PimSession, ShardedNttOp, warn_legacy
+
+    warn_legacy("pim_ntt_sharded", "run(compile(ShardedNttOp(n, banks)), a)")
     a = np.asarray(a, np.uint32)
-    plan = ShardedNttPlan(cfg, a.shape[0], banks, forward=forward, topo=topo)
-    out = plan.run_functional(a, ctx)
-    if not forward and scale_n_inv:
-        out = np.asarray(mm.np_mulmod(out, ctx.n_inv, ctx.q), np.uint32)
-    return out, plan
+    sess = PimSession(cfg, topo=topo)
+    plan = sess.compile(ShardedNttOp(a.shape[0], banks, forward=forward,
+                                     scale_n_inv=scale_n_inv))
+    r = sess.run(plan, a, ctx=ctx, time=False)
+    return r.value, plan.sharded_plan
 
 
 def polymul_batch(n: int, batch: int, cfg: PimConfig | None = None, policy: str = "rr"):
@@ -178,9 +182,11 @@ def polymul_batch(n: int, batch: int, cfg: PimConfig | None = None, policy: str 
     num_ranks x num_banks) queue FIFO.  Returns the closed-loop
     `repro.pimsys.SchedulerResult` (latency percentiles, throughput,
     device stats).  Timing only — for functional output use `pim_polymul`.
-    """
-    from repro.pimsys.scheduler import PolymulJob, RequestScheduler
 
-    cfg = cfg or PimConfig()
-    sched = RequestScheduler(cfg, policy=policy)
-    return sched.run_closed_loop([PolymulJob(n)] * batch)
+    Legacy shim over `repro.pimsys.session.PimSession`.
+    """
+    from repro.pimsys.session import BatchOp, PimSession, PolymulOp, warn_legacy
+
+    warn_legacy("polymul_batch", "run(compile(BatchOp(PolymulOp(n), batch)))")
+    sess = PimSession(cfg, policy=policy)
+    return sess.run(sess.compile(BatchOp(PolymulOp(n), batch))).timing

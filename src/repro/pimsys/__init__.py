@@ -1,10 +1,31 @@
 """`repro.pimsys` — device-level PIM memory system (beyond the paper).
 
 The paper models one NTT-PIM bank; this package models the device around
-it: `topology` (channels × ranks × banks), `controller` (per-channel
-command-bus arbitration over `core.pimsim.BankEngine`), `scheduler`
-(request queue + closed/open-loop injection), `trace` (text record /
-replay), and `stats` (device-wide counters, bus utilization, energy).
+it, fronted by ONE compile/execute API:
+
+    from repro.pimsys import PimSession, PolymulOp
+
+    sess = PimSession(PimConfig(num_buffers=4, num_channels=2, num_banks=4))
+    plan = sess.compile(PolymulOp(1024))     # frozen: commands, placement,
+                                             # twiddle-parameter streams
+    r = sess.run(plan, a, b)                 # RunResult: value/timing/stats/trace
+    sess.submit(plan, count=64, rate_per_us=0.1)   # queued open-loop traffic
+
+`session` is the entry layer: declarative op specs (`NttOp`,
+`InverseNttOp`, `PolymulOp`, `ShardedNttOp`, `BatchOp`) compile once into
+memoized `CompiledPlan`s — the paper's precomputed (w0, r_w) parameter
+streams made explicit — and run many times, mirroring how the MC amortizes
+trace generation over replay.  Beneath it sit `topology` (channels ×
+ranks × banks), `controller` (per-channel command-bus arbitration over
+`core.pimsim.BankEngine`), `scheduler` (request queue + closed/open-loop
+injection, gang-scheduled sharded jobs), `sharded` (four-step split of
+one NTT across banks/channels), `trace` (text record/replay), and `stats`
+(device-wide counters, bus utilization, energy).
+
+The pre-session entry points (`core.pimsim.simulate_ntt`,
+`simulate_multibank`, `simulate_ntt_sharded`, `core.polymul.pim_polymul`,
+`pim_ntt_sharded`, `polymul_batch`) remain as deprecated shims over a
+session, bit-identical in values, cycles, and command lists.
 """
 from repro.pimsys.controller import ChannelController, Completion, Device
 from repro.pimsys.scheduler import (
@@ -14,6 +35,18 @@ from repro.pimsys.scheduler import (
     SchedulerResult,
     ShardedNttJob,
     job_commands,
+)
+from repro.pimsys.session import (
+    BatchOp,
+    CompiledPlan,
+    InverseNttOp,
+    NttOp,
+    PimSession,
+    PolymulOp,
+    RunResult,
+    ShardedNttOp,
+    TraceHandle,
+    twiddle_param_stream,
 )
 from repro.pimsys.sharded import (
     ExchangePair,
@@ -27,24 +60,34 @@ from repro.pimsys.trace import dump_trace, dumps_trace, load_trace, loads_trace,
 
 __all__ = [
     "BankAddress",
+    "BatchOp",
     "ChannelController",
+    "CompiledPlan",
     "Completion",
     "Device",
     "DeviceTopology",
     "ExchangePair",
     "ExchangeStage",
+    "InverseNttOp",
     "NttJob",
+    "NttOp",
+    "PimSession",
     "PolymulJob",
+    "PolymulOp",
     "RequestScheduler",
+    "RunResult",
     "SchedulerResult",
     "ShardedNttJob",
+    "ShardedNttOp",
     "ShardedNttPlan",
     "ShardedTimingResult",
     "StatsRegistry",
+    "TraceHandle",
     "dump_trace",
     "dumps_trace",
     "job_commands",
     "load_trace",
     "loads_trace",
     "replay_trace",
+    "twiddle_param_stream",
 ]

@@ -189,6 +189,23 @@ class RequestScheduler:
         arrivals = np.cumsum(gaps_ns)
         return self._run(list(zip(arrivals.tolist(), jobs)))
 
+    # -- plan priming (repro.pimsys.session) ---------------------------------
+    def prime(self, job: Job, commands: Sequence[Command]) -> None:
+        """Pre-populate the per-job command cache from a compiled plan.
+
+        `PimSession.submit` routes `CompiledPlan`s here so queued traffic
+        replays the plan's frozen stream instead of re-running the mapper
+        per distinct job spec.  The stream must be the job's canonical
+        one (`job_commands` equivalent) — the scheduler trusts the
+        session's compiler for that.
+        """
+        if isinstance(job, ShardedNttJob):
+            raise TypeError("gang jobs have no single-bank stream to prime; "
+                            "the sharded plan cache handles them")
+        if job_rows(self.cfg, job) > self.cfg.rows_per_bank:
+            raise ValueError(f"{job} does not fit in one bank")
+        self._cmd_cache[job] = list(commands)
+
     # -- core event loop -----------------------------------------------------
     def _commands(self, job: Job) -> list[Command]:
         cmds = self._cmd_cache.get(job)

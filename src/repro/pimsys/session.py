@@ -1,0 +1,635 @@
+"""Unified compile/execute device API: `PimSession` (the tentpole layer).
+
+The paper's row-centric mapping owes its efficiency to *precomputation*:
+the memory controller derives each CU op's (w0, r_w) twiddle-parameter
+stream once and replays it (§IV-A).  The repo historically re-derived
+those streams on every call and exposed the device through six
+uncoordinated entry points (`pim_polymul`, `pim_ntt_sharded`,
+`simulate_ntt`, `simulate_multibank`, `simulate_ntt_sharded`,
+`polymul_batch`).  This module makes compile-once/run-many the default
+execution model:
+
+    sess = PimSession(PimConfig(num_buffers=4, num_channels=2, num_banks=4))
+    plan = sess.compile(PolymulOp(1024))        # frozen, reusable artifact
+    r    = sess.run(plan, a, b)                 # functional + timed
+    r.value, r.timing, r.stats, r.trace         # one unified result type
+    sess.submit(plan, count=64, rate_per_us=0.1)  # queued / open-loop
+
+Three layers:
+
+  * **op specs** — declarative, hashable descriptions of device work:
+    `NttOp`, `InverseNttOp`, `PolymulOp`, `ShardedNttOp`, and the batched
+    variant `BatchOp(op, count)`.
+  * **`compile(op) -> CompiledPlan`** — a frozen artifact holding the
+    command list(s), row/bank placement, the precomputed twiddle-parameter
+    stream (one table index per CU op, the functional content of the MC's
+    (w0, r_w) programs), and for sharded ops the `ShardedNttPlan` exchange
+    schedule.  Plans are memoized in a session-level cache keyed by
+    `(cfg, op)`; a second `compile` of an equal op returns the SAME object
+    and a repeated `run` performs zero mapper regeneration
+    (`core.mapping.mapper_generations` counts, tests assert).
+  * **`run(plan, *inputs) -> RunResult`** — one result type unifying the
+    functional output, `TimingResult` / `ShardedTimingResult` /
+    `MultiBankResult` / `SchedulerResult`, a `StatsRegistry` snapshot, and
+    an optional `TraceHandle` onto the `pimsys.trace` record/replay path.
+    `submit(plan, ...)` routes the same plans through `RequestScheduler`
+    for queued closed-loop batches and open-loop Poisson traffic.
+
+The legacy entry points remain available as thin shims over a session —
+bit-identical in values, cycle counts, and command lists — and each emits
+exactly one `DeprecationWarning` per call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core import modmath as mm
+from repro.core import ntt as ntt_ref
+from repro.core.mapping import (
+    BUWord,
+    C1,
+    C2,
+    Command,
+    FunctionalBank,
+    RowCentricMapper,
+    stage_strides,
+    twiddle_index,
+)
+from repro.core.pim_config import PimConfig
+from repro.core.pimsim import (
+    BankTimer,
+    MultiBankResult,
+    TimingResult,
+    analytic_multibank_bound,
+)
+from repro.core.polymul import polymul_phases
+from repro.pimsys.controller import ChannelController
+from repro.pimsys.scheduler import (
+    NttJob,
+    PolymulJob,
+    RequestScheduler,
+    SchedulerResult,
+    ShardedNttJob,
+)
+from repro.pimsys.sharded import ShardedNttPlan, ShardedTimingResult
+from repro.pimsys.stats import StatsRegistry
+from repro.pimsys.topology import DeviceTopology
+from repro.pimsys.trace import dump_trace, dumps_trace
+
+
+# --------------------------------------------------------------------------
+# Op specs — declarative, hashable device work descriptions
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NttOp:
+    """One size-n negacyclic NTT on one bank.
+
+    `forward=False` is the paper's orientation (GS butterflies, i.e. the
+    inverse transform); `scale_n_inv` applies the host-side 1/N scaling
+    on functional inverse runs, exactly as `core.mapping.pim_ntt` does.
+    """
+
+    n: int
+    forward: bool = False
+    scale_n_inv: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class InverseNttOp:
+    """Explicit-name alias for the inverse orientation.
+
+    Compiles to the same plan-cache entry as `NttOp(n, forward=False)` —
+    `compile(InverseNttOp(n)) is compile(NttOp(n))`.
+    """
+
+    n: int
+    scale_n_inv: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class PolymulOp:
+    """One RLWE polynomial product: NTT(a), NTT(b), ⊙, INTT, scale."""
+
+    n: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedNttOp:
+    """ONE size-n NTT four-step-sharded over `banks` banks/channels."""
+
+    n: int
+    banks: int = 2
+    forward: bool = False
+    scale_n_inv: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchOp:
+    """`count` independent copies of `op` run bank-parallel.
+
+    `BatchOp(NttOp(n), k)` reproduces the §VII multi-bank setting: k
+    identical NTT streams contending on one channel's shared command bus
+    (the `simulate_multibank` semantics, cross-checked against the
+    analytic bus bound).  `BatchOp(PolymulOp(n), k)` is a closed-loop
+    scheduler batch over the full topology (the `polymul_batch`
+    semantics).
+    """
+
+    op: "Op"
+    count: int
+
+
+Op = NttOp | InverseNttOp | PolymulOp | ShardedNttOp | BatchOp
+
+
+def _canonical(op: Op) -> Op:
+    """Normalize spelling variants so they share one plan-cache entry."""
+    if isinstance(op, InverseNttOp):
+        return NttOp(op.n, forward=False, scale_n_inv=op.scale_n_inv)
+    if isinstance(op, BatchOp):
+        inner = _canonical(op.op)
+        if not isinstance(inner, (NttOp, PolymulOp)):
+            raise TypeError(
+                f"BatchOp batches NttOp/PolymulOp, not {type(op.op).__name__}; "
+                "sharded work gang-schedules through submit() instead")
+        if op.count < 1:
+            raise ValueError("BatchOp.count must be >= 1")
+        return BatchOp(inner, op.count)
+    return op
+
+
+# --------------------------------------------------------------------------
+# Twiddle-parameter streams — the (w0, r_w) programs, precomputed
+# --------------------------------------------------------------------------
+
+
+def twiddle_param_stream(cfg: PimConfig, n: int,
+                         commands: Sequence[Command]) -> tuple[tuple[int, ...], ...]:
+    """Per-CU-op twiddle table indices, in issue order.
+
+    The hardware streams (w0, r_w) generator parameters over the command
+    bus per C1/C2/BUWord (§IV-A); functionally each such program is the
+    set of global twiddle-table indices the op resolves.  Precomputing the
+    stream once per `CompiledPlan` is the paper's amortization: `run()`
+    replays it without touching the mapper.  `n` is the GLOBAL transform
+    size (a sharded local stream resolves against the full table via its
+    shifted bases, so the same function covers both).
+    """
+    Na = cfg.atom_words
+    out: list[tuple[int, ...]] = []
+    for cmd in commands:
+        if isinstance(cmd, C1):
+            strides = stage_strides(Na, not cmd.gs)[cmd.stages_lo:cmd.stages_hi]
+            out.append(tuple(
+                twiddle_index(n, t, cmd.base + k)
+                for t in strides for k in range(0, Na, 2 * t)))
+        elif isinstance(cmd, C2):
+            out.append(tuple(
+                twiddle_index(n, cmd.stride, base) for base in cmd.bases_u))
+        elif isinstance(cmd, BUWord):
+            out.append((twiddle_index(n, cmd.stride, cmd.base_u),))
+    return tuple(out)
+
+
+# --------------------------------------------------------------------------
+# Compiled plans and run results
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceHandle:
+    """Lazy handle onto the `pimsys.trace` text record/replay path."""
+
+    streams: Mapping[tuple[int, int], list[Command]]
+
+    def dumps(self) -> str:
+        return dumps_trace(self.streams)
+
+    def dump(self, path) -> None:
+        dump_trace(self.streams, path)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPlan:
+    """Frozen, reusable execution artifact for one op under one config.
+
+    Holds everything `run()` needs that does not depend on the input
+    polynomials: the timed command list, per-phase functional streams,
+    row/bank placement, the precomputed twiddle-parameter streams, and
+    (sharded) the `ShardedNttPlan` with its exchange schedule.  Produced
+    only by `PimSession.compile`, which memoizes by `(cfg, op)` — equal
+    ops yield the identical object, so repeated runs regenerate nothing.
+    """
+
+    cfg: PimConfig
+    op: Op
+    commands: tuple[Command, ...]               # full timed stream ((); batch/sharded)
+    phases: Mapping[str, tuple[Command, ...]]   # functional sub-streams by name
+    placement: Mapping[str, object]             # row/bank placement decisions
+    sharded_plan: ShardedNttPlan | None = None  # exchange schedule owner
+    inner: "CompiledPlan | None" = None         # BatchOp: the replicated plan
+    count: int = 1
+    _twiddle_cache: tuple | None = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    @property
+    def twiddle_params(self) -> tuple:
+        """Per-CU-op (w0, r_w) index streams — the parameter programs the
+        MC replays per run.  Derived from the frozen command stream(s),
+        materialized once per plan on first access (timing-only runs
+        never pay for it) and cached thereafter."""
+        if self._twiddle_cache is None:
+            if self.inner is not None:
+                val = self.inner.twiddle_params
+            elif self.sharded_plan is not None:
+                val = tuple(
+                    twiddle_param_stream(self.cfg, self.op.n, s)
+                    for s in self.sharded_plan.local_streams())
+            else:
+                val = twiddle_param_stream(self.cfg, self.op.n, self.commands)
+            object.__setattr__(self, "_twiddle_cache", val)
+        return self._twiddle_cache
+
+    def job(self):
+        """The `RequestScheduler` job spec this plan executes as."""
+        op = self.op
+        if isinstance(op, NttOp):
+            return NttJob(op.n, forward=op.forward)
+        if isinstance(op, PolymulOp):
+            return PolymulJob(op.n)
+        if isinstance(op, ShardedNttOp):
+            return ShardedNttJob(op.n, banks=op.banks, forward=op.forward)
+        raise TypeError(f"no scheduler job for {type(op).__name__}")
+
+    def trace_streams(self) -> dict[tuple[int, int], list[Command]] | None:
+        """Statically placed command streams, or None when placement is
+        dynamic (scheduler-routed batches have no layout to record)."""
+        if self.sharded_plan is not None:
+            return self.sharded_plan.trace_streams()
+        if isinstance(self.op, BatchOp):
+            if isinstance(self.op.op, NttOp):
+                # the multibank path: `count` banks on one shared-bus channel
+                return {(0, i): list(self.inner.commands) for i in range(self.count)}
+            return None
+        return {(0, 0): list(self.commands)}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    """One result type for every execution path.
+
+    `value`  — functional output (None for timing-only runs)
+    `timing` — `TimingResult` (single bank), `ShardedTimingResult`,
+               `MultiBankResult` (BatchOp of NTTs) or `SchedulerResult`
+               (BatchOp of polymuls / `submit`); None when `time=False`
+    `stats`  — device-level `StatsRegistry` snapshot for the run
+    `trace`  — `TraceHandle` onto the command-level workload, when the
+               workload is statically placed (scheduler runs place
+               dynamically and carry no trace)
+    """
+
+    op: Op
+    value: np.ndarray | None
+    timing: TimingResult | ShardedTimingResult | MultiBankResult | SchedulerResult | None
+    stats: StatsRegistry | None
+    trace: TraceHandle | None
+
+
+# --------------------------------------------------------------------------
+# Deprecation shim support
+# --------------------------------------------------------------------------
+
+
+def _trace(plan: CompiledPlan) -> TraceHandle | None:
+    streams = plan.trace_streams()
+    return TraceHandle(streams) if streams is not None else None
+
+
+def warn_legacy(name: str, replacement: str) -> None:
+    """Emit the single DeprecationWarning a legacy shim owes per call."""
+    warnings.warn(
+        f"{name} is a legacy shim; use repro.pimsys.session.PimSession "
+        f"({replacement}) to compile once and run many",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+# --------------------------------------------------------------------------
+# The session
+# --------------------------------------------------------------------------
+
+
+class PimSession:
+    """Compile/execute façade over the whole `repro.pimsys` stack.
+
+    A session pins the device: `PimConfig`, `DeviceTopology`, arbitration
+    `policy`, and the `pipelined` engine mode.  Everything derived from
+    those — mapper command streams, twiddle-parameter streams, the
+    one-bank baseline timing, scheduler command caches — is computed once
+    and reused across `compile`/`run`/`submit` calls.
+    """
+
+    def __init__(self, cfg: PimConfig | None = None,
+                 topo: DeviceTopology | None = None,
+                 policy: str = "rr", pipelined: bool = True):
+        self.cfg = cfg or PimConfig()
+        self._explicit_topo = topo is not None
+        self.topo = topo or DeviceTopology.from_config(self.cfg)
+        self.policy = policy
+        self.pipelined = pipelined
+        self._plans: dict[tuple[PimConfig, Op], CompiledPlan] = {}
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self._baselines: dict[tuple[int, bool], TimingResult] = {}
+        self._contexts: dict[tuple[int, int], ntt_ref.NttContext] = {}
+        self._sched: RequestScheduler | None = None
+
+    # -- shared caches -------------------------------------------------------
+    def context(self, n: int, q: int = mm.DEFAULT_Q) -> ntt_ref.NttContext:
+        """Session-cached `NttContext` (twiddle tables) for modulus q."""
+        key = (q, n)
+        ctx = self._contexts.get(key)
+        if ctx is None:
+            ctx = self._contexts[key] = ntt_ref.make_context(q, n)
+        return ctx
+
+    def baseline(self, n: int, forward: bool = False) -> TimingResult:
+        """One-bank `BankTimer` reference timing, cached per (n, forward).
+
+        This is the `single` baseline sharded/multibank speedups divide
+        by; the session computes it once per size instead of once per
+        sweep point.
+        """
+        key = (n, forward)
+        hit = self._baselines.get(key)
+        if hit is None:
+            plan = self.compile(NttOp(n, forward=forward))
+            hit = self._baselines[key] = BankTimer(
+                self.cfg, pipelined=self.pipelined).simulate(plan.commands)
+        return hit
+
+    # -- compile -------------------------------------------------------------
+    def compile(self, op: Op) -> CompiledPlan:
+        """Lower an op spec to a frozen `CompiledPlan`, memoized.
+
+        The cache key is `(cfg, op)` after spelling normalization
+        (`InverseNttOp(n)` and `NttOp(n)` share an entry); a hit returns
+        the identical plan object.
+        """
+        op = _canonical(op)
+        key = (self.cfg, op)
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.plan_hits += 1
+            return plan
+        self.plan_misses += 1
+        plan = self._plans[key] = self._compile(op)
+        return plan
+
+    def _compile(self, op: Op) -> CompiledPlan:
+        cfg = self.cfg
+        if isinstance(op, NttOp):
+            cmds = tuple(RowCentricMapper(cfg, op.n, forward=op.forward).commands())
+            return CompiledPlan(
+                cfg=cfg, op=op, commands=cmds, phases={"ntt": cmds},
+                placement={"base_row": 0,
+                           "rows": max(1, op.n // cfg.row_words)},
+            )
+        if isinstance(op, PolymulOp):
+            raw, row_b = polymul_phases(cfg, op.n)
+            phases = {k: tuple(v) for k, v in raw.items()}
+            cmds = tuple(c for p in phases.values() for c in p)
+            return CompiledPlan(
+                cfg=cfg, op=op, commands=cmds, phases=phases,
+                placement={"row_a": 0, "row_b": row_b,
+                           "rows": max(1, op.n // cfg.row_words)},
+            )
+        if isinstance(op, ShardedNttOp):
+            sharded = ShardedNttPlan(
+                cfg, op.n, op.banks, forward=op.forward,
+                topo=self.topo if self._explicit_topo else None)
+            locals_ = sharded.local_streams()
+            return CompiledPlan(
+                cfg=cfg, op=op, commands=(),
+                phases={f"local:{b}": tuple(s) for b, s in enumerate(locals_)},
+                placement={"flat_banks": sharded.flat_banks},
+                sharded_plan=sharded,
+            )
+        if isinstance(op, BatchOp):
+            inner = self.compile(op.op)
+            return CompiledPlan(
+                cfg=cfg, op=op, commands=inner.commands, phases=inner.phases,
+                placement=inner.placement, inner=inner, count=op.count,
+            )
+        raise TypeError(f"cannot compile {op!r}")
+
+    # -- run -----------------------------------------------------------------
+    def run(self, plan: CompiledPlan | Op, *inputs: np.ndarray,
+            ctx: ntt_ref.NttContext | None = None,
+            single: TimingResult | None = None,
+            time: bool = True) -> RunResult:
+        """Execute a compiled plan: functional when `*inputs` are given,
+        timed unless `time=False`, both by default.
+
+        `ctx` overrides the session's cached `NttContext` (needed for a
+        non-default modulus); `single` overrides the cached one-bank
+        baseline that `ShardedNttOp` / `BatchOp(NttOp)` speedups
+        reference (meaningless — and ignored — for the other ops).
+        """
+        if not isinstance(plan, CompiledPlan):
+            plan = self.compile(plan)
+        if plan.cfg != self.cfg:
+            raise ValueError("plan was compiled for a different PimConfig")
+        op = plan.op
+        if isinstance(op, NttOp):
+            return self._run_ntt(plan, inputs, ctx, time)
+        if isinstance(op, PolymulOp):
+            return self._run_polymul(plan, inputs, ctx, time)
+        if isinstance(op, ShardedNttOp):
+            return self._run_sharded(plan, inputs, ctx, single, time)
+        if isinstance(op, BatchOp):
+            if inputs:
+                raise ValueError("BatchOp runs are timing-only; run the "
+                                 "inner plan for functional output")
+            if not time:  # plan-validation only: skip the device simulation
+                return RunResult(op=op, value=None, timing=None, stats=None,
+                                 trace=_trace(plan))
+            if isinstance(op.op, NttOp):
+                return self._run_multibank(plan, single)
+            return self.submit(plan)
+        raise TypeError(f"cannot run {op!r}")
+
+    def _require(self, inputs, k: int, what: str):
+        if len(inputs) != k:
+            raise ValueError(f"{what} takes {k} input polynomial(s), got {len(inputs)}")
+
+    def _ctx_for(self, n: int, ctx: ntt_ref.NttContext | None) -> ntt_ref.NttContext:
+        ctx = ctx or self.context(n)
+        if ctx.n != n:
+            raise ValueError(f"context is for n={ctx.n}, op is n={n}")
+        return ctx
+
+    def _single_bank_result(self, op, value, timing, plan) -> RunResult:
+        stats = None
+        if timing is not None:
+            stats = StatsRegistry()
+            stats.add_bank(0, 0, dict(timing.stats))
+        return RunResult(op=op, value=value, timing=timing, stats=stats,
+                         trace=_trace(plan))
+
+    def _run_ntt(self, plan, inputs, ctx, time) -> RunResult:
+        op, cfg = plan.op, self.cfg
+        value = None
+        if inputs:
+            self._require(inputs, 1, "NttOp")
+            a = np.asarray(inputs[0], np.uint32)
+            if a.shape[0] != op.n:
+                raise ValueError(f"input length {a.shape[0]} != n={op.n}")
+            if op.n < cfg.atom_words:
+                raise ValueError("n must be at least one atom")
+            ctx = self._ctx_for(op.n, ctx)
+            bank = FunctionalBank(cfg, ctx, forward=op.forward)
+            bank.load_poly(a)
+            bank.run(plan.commands)
+            value = bank.read_poly(op.n)
+            if not op.forward and op.scale_n_inv:
+                value = np.asarray(mm.np_mulmod(value, ctx.n_inv, ctx.q), np.uint32)
+        timing = None
+        if time:
+            timing = BankTimer(cfg, pipelined=self.pipelined).simulate(plan.commands)
+        return self._single_bank_result(op, value, timing, plan)
+
+    def _run_polymul(self, plan, inputs, ctx, time) -> RunResult:
+        op, cfg = plan.op, self.cfg
+        value = None
+        if inputs:
+            self._require(inputs, 2, "PolymulOp")
+            a = np.asarray(inputs[0], np.uint32)
+            b = np.asarray(inputs[1], np.uint32)
+            if a.shape[0] != op.n or b.shape[0] != op.n:
+                raise ValueError(
+                    f"input lengths ({a.shape[0]}, {b.shape[0]}) != n={op.n}")
+            ctx = self._ctx_for(op.n, ctx)
+            row_b = plan.placement["row_b"]
+            # phase-wise functional execution: the FunctionalBank resolves
+            # twiddles by direction (same discipline as legacy pim_polymul)
+            bank_f = FunctionalBank(cfg, ctx, forward=True)
+            bank_f.load_poly(a, base_row=0)
+            bank_f.load_poly(b, base_row=row_b)
+            bank_f.run(plan.phases["fwd_a"])
+            bank_f.run(plan.phases["fwd_b"])
+            bank_f.run(plan.phases["pointwise"])
+            bank_i = FunctionalBank(cfg, ctx, forward=False)
+            bank_i.mem = bank_f.mem  # share the memory image
+            bank_i.run(plan.phases["inv_a"])
+            value = bank_i.read_poly(op.n)
+            value = np.asarray(mm.np_mulmod(value, ctx.n_inv, ctx.q), np.uint32)
+        timing = None
+        if time:
+            timing = BankTimer(cfg, pipelined=self.pipelined).simulate(plan.commands)
+        return self._single_bank_result(op, value, timing, plan)
+
+    def _run_sharded(self, plan, inputs, ctx, single, time) -> RunResult:
+        op = plan.op
+        sharded = plan.sharded_plan
+        value = None
+        if inputs:
+            self._require(inputs, 1, "ShardedNttOp")
+            a = np.asarray(inputs[0], np.uint32)
+            ctx = self._ctx_for(op.n, ctx)
+            value = sharded.run_functional(a, ctx)
+            if not op.forward and op.scale_n_inv:
+                value = np.asarray(mm.np_mulmod(value, ctx.n_inv, ctx.q), np.uint32)
+        timing = None
+        stats = None
+        if time:
+            timing = sharded.simulate(
+                policy=self.policy,
+                single=single or self.baseline(op.n, op.forward),
+                pipelined=self.pipelined)
+            stats = timing.stats
+        return RunResult(op=op, value=value, timing=timing, stats=stats,
+                         trace=_trace(plan))
+
+    def _run_multibank(self, plan, single) -> RunResult:
+        """`count` identical NTT streams on one shared-bus channel — the
+        §VII multi-bank experiment, cross-checked against the analytic
+        bus bound (bit-identical to legacy `simulate_multibank`)."""
+        op: BatchOp = plan.op
+        inner: NttOp = op.op
+        cfg, banks = self.cfg, op.count
+        single = single or self.baseline(inner.n, inner.forward)
+        ctrl = ChannelController(cfg, policy=self.policy)
+        for i in range(banks):
+            ctrl.enqueue(ctrl.add_bank(pipelined=self.pipelined),
+                         plan.inner.commands, job_id=i)
+        ctrl.drain()
+        latency = ctrl.makespan_ns
+        analytic = analytic_multibank_bound(inner.n, banks, cfg, single)
+        if latency < analytic - 1e-6:  # not an assert: must survive python -O
+            raise RuntimeError(
+                f"controller beat the analytic bus bound: {latency} < {analytic}")
+        speedup = banks * single.ns / latency
+        timing = MultiBankResult(
+            banks=banks,
+            latency_ns=latency,
+            speedup=speedup,
+            efficiency=speedup / banks,
+            bus_utilization=min(1.0, ctrl.bus_busy_ns / latency),
+            analytic_latency_ns=analytic,
+            policy=self.policy,
+        )
+        stats = StatsRegistry()
+        ctrl.record_stats(stats)
+        return RunResult(op=op, value=None, timing=timing, stats=stats,
+                         trace=_trace(plan))
+
+    # -- submit: queued / open-loop traffic through the scheduler ------------
+    def scheduler(self) -> RequestScheduler:
+        """The session's persistent `RequestScheduler` (lazy).
+
+        Persisting it lets the scheduler's command and sharded-gang
+        caches compound across `submit` calls; results are unaffected
+        (every run simulates on a fresh `Device`)."""
+        if self._sched is None:
+            self._sched = RequestScheduler(self.cfg, self.topo,
+                                           policy=self.policy,
+                                           pipelined=self.pipelined)
+        return self._sched
+
+    def submit(self, plan: CompiledPlan | Op, count: int = 1, *,
+               rate_per_us: float | None = None, seed: int = 0) -> RunResult:
+        """Route `count` copies of a plan through the request scheduler.
+
+        Closed loop (all present at t=0) by default; pass `rate_per_us`
+        for open-loop Poisson arrivals.  Single-bank plans prime the
+        scheduler's command cache with the compiled stream, so queued
+        traffic reuses the plan instead of re-mapping per job.
+        """
+        if not isinstance(plan, CompiledPlan):
+            plan = self.compile(plan)
+        if plan.cfg != self.cfg:
+            raise ValueError("plan was compiled for a different PimConfig")
+        if isinstance(plan.op, BatchOp):
+            return dataclasses.replace(
+                self.submit(plan.inner, count=count * plan.count,
+                            rate_per_us=rate_per_us, seed=seed),
+                op=plan.op)
+        job = plan.job()
+        sched = self.scheduler()
+        if not isinstance(job, ShardedNttJob):
+            sched.prime(job, plan.commands)
+        jobs = [job] * count
+        if rate_per_us is None:
+            res = sched.run_closed_loop(jobs)
+        else:
+            res = sched.run_open_loop(jobs, rate_per_us=rate_per_us, seed=seed)
+        return RunResult(op=plan.op, value=None, timing=res, stats=res.stats,
+                         trace=None)

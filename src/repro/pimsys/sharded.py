@@ -65,7 +65,7 @@ from repro.core.mapping import (
     twiddle_index,
 )
 from repro.core.pim_config import PimConfig
-from repro.core.pimsim import BankEngine, TimingResult, simulate_ntt
+from repro.core.pimsim import BankEngine, TimingResult, _time_ntt
 from repro.pimsys.controller import ChannelController, Device
 from repro.pimsys.stats import StatsRegistry
 from repro.pimsys.topology import DeviceTopology
@@ -182,6 +182,7 @@ class ShardedNttPlan:
         for f in self.flat_banks:
             self.topo.address_of(f)  # range check
         self._local_streams: list[list[Command]] | None = None
+        self._exchange_stages: list[ExchangeStage] | None = None
 
     # -- command-level structure --------------------------------------------
     def local_streams(self) -> list[list[Command]]:
@@ -200,7 +201,14 @@ class ShardedNttPlan:
         return self._local_streams
 
     def exchange_stages(self) -> list[ExchangeStage]:
-        """Cross-bank stages, in execution order for this orientation."""
+        """Cross-bank stages, in execution order for this orientation.
+
+        Cached (like `local_streams`): the stage set and its shared
+        twiddle indices are pure functions of (n, banks, orientation), so
+        repeated `simulate`/`run_functional` calls replay one schedule.
+        """
+        if self._exchange_stages is not None:
+            return self._exchange_stages
         strides = [self.m << i for i in range(int(math.log2(self.banks)))]
         if self.forward:
             strides = strides[::-1]  # CT: large strides first
@@ -214,6 +222,7 @@ class ShardedNttPlan:
                 if (b // tb) % 2 == 0
             )
             stages.append(ExchangeStage(stride=t, pairs=pairs))
+        self._exchange_stages = stages
         return stages
 
     def trace_streams(self) -> dict[tuple[int, int], list[Command]]:
@@ -417,8 +426,8 @@ class ShardedNttPlan:
         self._xfer_hops = 0
         ready = [0.0] * self.banks
         if single is None and baseline:
-            single = simulate_ntt(self.n, self.cfg, forward=self.forward,
-                                  pipelined=pipelined)
+            single = _time_ntt(self.n, self.cfg, forward=self.forward,
+                               pipelined=pipelined)
         single_ns = single.ns if single is not None else 0.0
 
         def run_local(gates: list[float]) -> None:

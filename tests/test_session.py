@@ -1,0 +1,367 @@
+"""Session API (`repro.pimsys.session`) — parity, caching, and shims.
+
+Four layers:
+  1. parity: `PimSession` results are bit-identical — values, cycle
+     counts, command lists — to every legacy entry point it shims
+     (`simulate_ntt`, `simulate_multibank`, `simulate_ntt_sharded`,
+     `pim_polymul`, `pim_ntt_sharded`, `polymul_batch`);
+  2. plan cache: compile is memoized by (cfg, op) with hit/miss
+     accounting, spelling variants share entries, and a repeated run()
+     performs ZERO mapper/twiddle regeneration (the
+     `core.mapping.mapper_generations` counter proves it);
+  3. unified results: RunResult carries functional value, timing, a
+     StatsRegistry snapshot, and a replayable TraceHandle;
+  4. deprecation: each legacy shim emits exactly one DeprecationWarning
+     per call (no cascades through nested shims).
+
+The hypothesis twin lives in `test_session_props.py`.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import mapping, modmath as mm, ntt
+from repro.core.mapping import RowCentricMapper, twiddle_index
+from repro.core.pim_config import PimConfig
+from repro.core.pimsim import (
+    BankTimer,
+    simulate_multibank,
+    simulate_ntt,
+    simulate_ntt_sharded,
+)
+from repro.core.polymul import (
+    pim_ntt_sharded,
+    pim_polymul,
+    polymul_batch,
+    polymul_commands,
+)
+from repro.pimsys import (
+    BatchOp,
+    CompiledPlan,
+    InverseNttOp,
+    NttOp,
+    PimSession,
+    PolymulOp,
+    RequestScheduler,
+    PolymulJob,
+    ShardedNttOp,
+    dumps_trace,
+)
+
+Q = mm.DEFAULT_Q
+
+
+def rand_poly(n, seed):
+    return np.random.default_rng(seed).integers(0, Q, n).astype(np.uint32)
+
+
+def quiet(fn, *a, **kw):
+    """Call a legacy shim with its DeprecationWarning suppressed."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*a, **kw)
+
+
+# ---------------------------------------------------------------------------
+# 1. parity with every legacy entry point
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("forward", [False, True])
+@pytest.mark.parametrize("nb", [1, 2, 4])
+def test_parity_simulate_ntt(forward, nb):
+    n, cfg = 1024, PimConfig(num_buffers=nb)
+    sess = PimSession(cfg)
+    got = sess.run(sess.compile(NttOp(n, forward=forward))).timing
+    ref = quiet(simulate_ntt, n, cfg, forward=forward)
+    assert got.ns == ref.ns  # exact, not approx
+    assert got.stats == ref.stats
+    assert got.phase_ns == ref.phase_ns
+
+
+def test_parity_simulate_ntt_command_list(small_pim_cfg):
+    n = 512
+    sess = PimSession(small_pim_cfg)
+    plan = sess.compile(NttOp(n))
+    assert list(plan.commands) == RowCentricMapper(small_pim_cfg, n).commands()
+
+
+def test_parity_pim_polymul(small_pim_cfg):
+    n = 512
+    cfg = small_pim_cfg.with_(num_buffers=4)
+    ctx = ntt.make_context(Q, n)
+    a, b = rand_poly(n, 1), rand_poly(n, 2)
+    ref_out, ref_t = quiet(pim_polymul, a, b, ctx, cfg)
+    sess = PimSession(cfg)
+    plan = sess.compile(PolymulOp(n))
+    r = sess.run(plan, a, b, ctx=ctx)
+    assert np.array_equal(r.value, ref_out)
+    assert np.array_equal(r.value, ntt.polymul_negacyclic_np(a, b, ctx))
+    assert r.timing.ns == ref_t.ns
+    assert r.timing.stats == ref_t.stats
+    # command-LIST identity with the legacy stream builder
+    assert list(plan.commands) == polymul_commands(cfg, n)[0]
+
+
+@pytest.mark.parametrize("forward", [False, True])
+def test_parity_pim_ntt_sharded(small_pim_cfg, forward):
+    n, banks = 512, 4
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly(n, 3)
+    ref_out, ref_plan = quiet(pim_ntt_sharded, a, ctx, small_pim_cfg,
+                              banks=banks, forward=forward)
+    sess = PimSession(small_pim_cfg)
+    plan = sess.compile(ShardedNttOp(n, banks, forward=forward))
+    r = sess.run(plan, a, ctx=ctx, time=False)
+    assert np.array_equal(r.value, ref_out)
+    # per-bank command streams are identical
+    assert plan.sharded_plan.local_streams() == ref_plan.local_streams()
+    assert plan.sharded_plan.exchange_stages() == ref_plan.exchange_stages()
+
+
+def test_parity_simulate_ntt_sharded(small_pim_cfg):
+    n, banks = 1024, 4
+    ref = quiet(simulate_ntt_sharded, n, banks, small_pim_cfg)
+    sess = PimSession(small_pim_cfg)
+    got = sess.run(sess.compile(ShardedNttOp(n, banks))).timing
+    for f in ("latency_ns", "local_ns", "exchange_ns", "single_ns",
+              "analytic_local_ns", "exchange_bus_occupancy",
+              "xfer_atoms", "xfer_hops"):
+        assert getattr(got, f) == getattr(ref, f), f
+    assert got.stats.device_counts() == ref.stats.device_counts()
+
+
+@pytest.mark.parametrize("banks", [1, 2, 8])
+def test_parity_simulate_multibank(banks):
+    cfg = PimConfig(num_buffers=2)
+    ref = quiet(simulate_multibank, 1024, banks, cfg)
+    sess = PimSession(cfg)
+    got = sess.run(sess.compile(BatchOp(NttOp(1024), banks))).timing
+    assert got == ref  # full dataclass equality: every field bit-identical
+
+
+def test_parity_polymul_batch(small_pim_cfg):
+    ref = quiet(polymul_batch, 512, 8, small_pim_cfg)
+    sess = PimSession(small_pim_cfg)
+    got = sess.run(sess.compile(BatchOp(PolymulOp(512), 8))).timing
+    assert got.makespan_ns == ref.makespan_ns
+    assert np.array_equal(got.done_ns, ref.done_ns)
+    assert np.array_equal(got.dispatch_ns, ref.dispatch_ns)
+    assert got.stats.device_counts() == ref.stats.device_counts()
+
+
+def test_parity_submit_open_loop(small_pim_cfg):
+    """Priming the scheduler with a compiled plan changes nothing about
+    the open-loop result vs the raw RequestScheduler path."""
+    ref = RequestScheduler(small_pim_cfg).run_open_loop(
+        [PolymulJob(512)] * 12, rate_per_us=0.1, seed=7)
+    sess = PimSession(small_pim_cfg)
+    got = sess.submit(sess.compile(PolymulOp(512)), count=12,
+                      rate_per_us=0.1, seed=7).timing
+    assert got.makespan_ns == ref.makespan_ns
+    assert np.array_equal(got.done_ns, ref.done_ns)
+    assert np.array_equal(got.arrivals_ns, ref.arrivals_ns)
+
+
+# ---------------------------------------------------------------------------
+# 2. plan cache + zero-regeneration guarantees
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hit_miss_accounting(small_pim_cfg):
+    sess = PimSession(small_pim_cfg)
+    p1 = sess.compile(NttOp(256))
+    assert (sess.plan_misses, sess.plan_hits) == (1, 0)
+    p2 = sess.compile(NttOp(256))
+    assert p2 is p1  # the identical frozen object, not a copy
+    assert (sess.plan_misses, sess.plan_hits) == (1, 1)
+    p3 = sess.compile(NttOp(512))
+    assert p3 is not p1
+    assert (sess.plan_misses, sess.plan_hits) == (2, 1)
+
+
+def test_plan_cache_spelling_variants_share_entry(small_pim_cfg):
+    sess = PimSession(small_pim_cfg)
+    assert sess.compile(InverseNttOp(256)) is sess.compile(NttOp(256))
+    # the forward orientation is a different plan
+    assert sess.compile(NttOp(256, forward=True)) is not sess.compile(NttOp(256))
+
+
+def test_second_run_zero_mapper_regeneration(small_pim_cfg):
+    """The acceptance-criteria counter test: a repeated run() on a cached
+    plan performs NO mapper (twiddle-stream) regeneration, for every op
+    kind including timing."""
+    sess = PimSession(small_pim_cfg)
+    ctx = ntt.make_context(Q, 256)
+    a, b = rand_poly(256, 4), rand_poly(256, 5)
+    plans = {
+        "ntt": (sess.compile(NttOp(256)), (a,)),
+        "polymul": (sess.compile(PolymulOp(256)), (a, b)),
+        "sharded": (sess.compile(ShardedNttOp(256, 4)), (a,)),
+        "batch": (sess.compile(BatchOp(NttOp(256), 4)), ()),
+    }
+    for name, (plan, inputs) in plans.items():
+        sess.run(plan, *inputs, ctx=ctx if inputs else None)  # warm run
+        before = mapping.mapper_generations()
+        sess.run(plan, *inputs, ctx=ctx if inputs else None)  # cached run
+        assert mapping.mapper_generations() == before, (
+            f"{name}: second run regenerated a mapper stream")
+
+
+def test_second_submit_zero_mapper_regeneration(small_pim_cfg):
+    sess = PimSession(small_pim_cfg)
+    plan = sess.compile(PolymulOp(256))
+    sess.submit(plan, count=4)
+    before = mapping.mapper_generations()
+    sess.submit(plan, count=4)
+    assert mapping.mapper_generations() == before
+
+
+def test_twiddle_param_stream_precomputed(small_pim_cfg):
+    """The plan's (w0, r_w)-equivalent parameter streams match the table
+    indices the functional executor resolves per CU op."""
+    from repro.core.mapping import C1, C2, BUWord
+
+    n = 512
+    sess = PimSession(small_pim_cfg)
+    plan = sess.compile(NttOp(n))
+    cu_ops = [c for c in plan.commands if isinstance(c, (C1, C2, BUWord))]
+    assert len(plan.twiddle_params) == len(cu_ops)
+    for cmd, params in zip(cu_ops, plan.twiddle_params):
+        assert params  # every CU op resolves at least one twiddle
+        if isinstance(cmd, C2):
+            assert params == tuple(
+                twiddle_index(n, cmd.stride, base) for base in cmd.bases_u)
+
+
+def test_baseline_cached_per_size(small_pim_cfg):
+    sess = PimSession(small_pim_cfg)
+    t1 = sess.baseline(1024)
+    before = mapping.mapper_generations()
+    t2 = sess.baseline(1024)
+    assert t2 is t1 and mapping.mapper_generations() == before
+    assert t1.ns == BankTimer(small_pim_cfg).simulate(
+        RowCentricMapper(small_pim_cfg, 1024).commands()).ns
+
+
+# ---------------------------------------------------------------------------
+# 3. unified RunResult: stats snapshot + trace handle
+# ---------------------------------------------------------------------------
+
+
+def test_run_result_stats_snapshot(small_pim_cfg):
+    sess = PimSession(small_pim_cfg)
+    r = sess.run(sess.compile(NttOp(512)))
+    assert r.value is None  # timing-only run
+    assert r.stats.bank_counts(0, 0) == r.timing.stats
+    assert r.stats.device_counts()["c2"] > 0
+
+
+def test_run_result_trace_handle_replayable(small_pim_cfg):
+    from repro.pimsys import loads_trace, replay_trace
+
+    sess = PimSession(small_pim_cfg)
+    plan = sess.compile(NttOp(256))
+    r = sess.run(plan)
+    text = r.trace.dumps()
+    assert text == dumps_trace({(0, 0): list(plan.commands)})
+    dev = replay_trace(small_pim_cfg, loads_trace(text))
+    assert dev.makespan_ns == r.timing.ns  # trace replays to live timing
+
+
+def test_run_result_sharded_trace_matches_plan(small_pim_cfg):
+    sess = PimSession(small_pim_cfg)
+    plan = sess.compile(ShardedNttOp(512, 4))
+    r = sess.run(plan)
+    assert r.trace.dumps() == dumps_trace(plan.sharded_plan.trace_streams())
+
+
+def test_scheduler_prime_rejects_misfit_and_gangs(small_pim_cfg):
+    from repro.pimsys import NttJob, ShardedNttJob
+
+    sched = RequestScheduler(small_pim_cfg.with_(rows_per_bank=4))
+    with pytest.raises(ValueError):
+        sched.prime(NttJob(4096), [])
+    with pytest.raises(TypeError):
+        RequestScheduler(small_pim_cfg).prime(ShardedNttJob(512, banks=2), [])
+
+
+def test_run_validation_errors(small_pim_cfg):
+    sess = PimSession(small_pim_cfg)
+    plan = sess.compile(NttOp(256))
+    with pytest.raises(ValueError):  # wrong input arity
+        sess.run(plan, rand_poly(256, 0), rand_poly(256, 1))
+    with pytest.raises(ValueError):  # wrong length
+        sess.run(plan, rand_poly(512, 0))
+    with pytest.raises(ValueError):  # plan from another config
+        PimSession(small_pim_cfg.with_(num_buffers=6)).run(plan)
+    with pytest.raises(TypeError):  # batches batch NttOp/PolymulOp only
+        sess.compile(BatchOp(ShardedNttOp(256, 2), 2))
+    with pytest.raises(ValueError):
+        sess.compile(BatchOp(NttOp(256), 0))
+    with pytest.raises(ValueError):  # batch runs are timing-only
+        sess.run(sess.compile(BatchOp(NttOp(256), 2)), rand_poly(256, 0))
+    with pytest.raises(ValueError):  # polymul inputs must match the plan's n
+        sess.run(sess.compile(PolymulOp(512)), rand_poly(256, 0),
+                 rand_poly(256, 1))
+
+
+def test_scheduler_routed_batch_has_no_static_trace(small_pim_cfg):
+    """Scheduler-placed work carries no trace handle (placement is
+    dynamic), and both run() and submit() report the BatchOp itself."""
+    sess = PimSession(small_pim_cfg)
+    plan = sess.compile(BatchOp(PolymulOp(256), 4))
+    r = sess.run(plan)
+    assert r.trace is None
+    assert r.op == plan.op
+    assert sess.run(plan, time=False).trace is None
+    assert sess.submit(plan).op == plan.op
+
+
+def test_batch_time_false_skips_simulation(small_pim_cfg):
+    """time=False on a batch plan validates without paying the device
+    simulation: no timing, and no commands issued anywhere."""
+    sess = PimSession(small_pim_cfg)
+    plan = sess.compile(BatchOp(NttOp(256), 4))
+    before = mapping.mapper_generations()
+    r = sess.run(plan, time=False)
+    assert r.timing is None and r.stats is None
+    assert mapping.mapper_generations() == before
+    assert set(r.trace.streams) == {(0, i) for i in range(4)}
+
+
+# ---------------------------------------------------------------------------
+# 4. deprecation discipline of the legacy shims
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,call", [
+    ("simulate_ntt", lambda cfg, a, ctx: simulate_ntt(256, cfg)),
+    ("simulate_multibank", lambda cfg, a, ctx: simulate_multibank(256, 2, cfg)),
+    ("simulate_ntt_sharded", lambda cfg, a, ctx: simulate_ntt_sharded(256, 2, cfg)),
+    ("pim_polymul", lambda cfg, a, ctx: pim_polymul(a, a, ctx, cfg)),
+    ("pim_ntt_sharded", lambda cfg, a, ctx: pim_ntt_sharded(a, ctx, cfg, banks=2)),
+    ("polymul_batch", lambda cfg, a, ctx: polymul_batch(256, 2, cfg)),
+])
+def test_legacy_shim_warns_exactly_once(small_pim_cfg, name, call):
+    ctx = ntt.make_context(Q, 256)
+    a = rand_poly(256, 9)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        call(small_pim_cfg, a, ctx)
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1, f"{name}: {len(dep)} DeprecationWarnings"
+    assert name in str(dep[0].message)
+
+
+def test_session_api_emits_no_warnings(small_pim_cfg):
+    sess = PimSession(small_pim_cfg)
+    ctx = ntt.make_context(Q, 256)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        sess.run(sess.compile(PolymulOp(256)), rand_poly(256, 0),
+                 rand_poly(256, 1), ctx=ctx)
+        sess.run(sess.compile(ShardedNttOp(256, 2)))
+        sess.submit(sess.compile(PolymulOp(256)), count=2)
+    assert [x for x in w if issubclass(x.category, DeprecationWarning)] == []

@@ -1,0 +1,67 @@
+"""Hypothesis property twin of `test_session.py`'s parity layer.
+
+Random sizes, buffer counts, orientations and inputs: the session's
+compile/run path must match the `core.ntt` reference exactly, and plan
+reuse (the whole point of the session) must not perturb results — the
+same cached plan re-run on fresh inputs stays bit-exact.  Skips as a
+module when hypothesis is absent (the `hypo` shim), like every property
+module in the suite; `test_session.py` keeps a deterministic grid
+running either way.
+"""
+import numpy as np
+from hypo import given, settings, st
+
+from repro.core import modmath as mm
+from repro.core import ntt
+from repro.core.pim_config import PimConfig
+from repro.pimsys import NttOp, PimSession, PolymulOp, ShardedNttOp
+
+Q = mm.DEFAULT_Q
+
+# Sessions are module-level on purpose: every example below REUSES cached
+# plans from earlier examples, so the properties exercise exactly the
+# compile-once/run-many path the session exists for.
+SESSIONS = {nb: PimSession(PimConfig(num_buffers=nb, num_channels=2,
+                                     num_banks=2))
+            for nb in (2, 4)}
+
+
+def rand_poly(n, seed):
+    return np.random.default_rng(seed).integers(0, Q, n).astype(np.uint32)
+
+
+@given(st.sampled_from([64, 128, 256, 512, 1024]), st.sampled_from([2, 4]),
+       st.booleans(), st.integers(0, 2**31))
+@settings(max_examples=15)
+def test_session_ntt_matches_reference(n, nb, forward, seed):
+    sess = SESSIONS[nb]
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly(n, seed)
+    r = sess.run(sess.compile(NttOp(n, forward=forward)), a, ctx=ctx, time=False)
+    ref = ntt.ntt_forward_np(a, ctx) if forward else ntt.ntt_inverse_np(a, ctx)
+    assert np.array_equal(r.value, ref)
+
+
+@given(st.sampled_from([64, 256, 512]), st.sampled_from([2, 4]),
+       st.integers(0, 2**31))
+@settings(max_examples=10)
+def test_session_polymul_matches_reference(n, nb, seed):
+    sess = SESSIONS[nb]
+    ctx = ntt.make_context(Q, n)
+    a, b = rand_poly(n, seed), rand_poly(n, seed ^ 0x5EED)
+    r = sess.run(sess.compile(PolymulOp(n)), a, b, ctx=ctx, time=False)
+    assert np.array_equal(r.value, ntt.polymul_negacyclic_np(a, b, ctx))
+
+
+@given(st.sampled_from([128, 256, 512]), st.sampled_from([2, 4]),
+       st.integers(0, 2**31))
+@settings(max_examples=10)
+def test_session_sharded_roundtrip(n, banks, seed):
+    sess = SESSIONS[2]
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly(n, seed)
+    fwd = sess.run(sess.compile(ShardedNttOp(n, banks, forward=True)),
+                   a, ctx=ctx, time=False).value
+    back = sess.run(sess.compile(ShardedNttOp(n, banks)),
+                    fwd, ctx=ctx, time=False).value
+    assert np.array_equal(back, a)
