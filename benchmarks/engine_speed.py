@@ -1,0 +1,107 @@
+"""Commands/s microbenchmark of the hierarchical issue path.
+
+The cycle-level simulator is a pure-Python event loop, so sweeps beyond
+~32 banks x N=16384 are bounded by how fast `repro.pimsys.engine` can
+issue commands.  The seed implementation ran ~234k cmd/s single-bank and
+~115k cmd/s through the 8-bank arbiter on the reference container; the
+dispatch-table/__slots__/bound-locals engine targets (and this benchmark
+guards) at least 2x both.
+
+Three legs:
+  bank      `BankTimer` driving one `BankEngine` in program order
+  channel   8 banks arbitrated on one shared bus (`ChannelController`)
+  device    4 channels x 4 banks through `DeviceEngine.drain`
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.engine_speed [--n 4096]
+        [--repeat 3] [--min-rate CMDS_PER_S]
+
+`--min-rate` exits nonzero if the CHANNEL leg (the historical ~100k
+cmd/s bottleneck the ROADMAP names) falls below the floor — a
+perf-regression guard usable from CI.
+"""
+import argparse
+import sys
+import time
+
+from repro.core.mapping import RowCentricMapper
+from repro.core.pim_config import PimConfig
+from repro.core.pimsim import BankTimer
+from repro.pimsys import ChannelController, DeviceEngine, DeviceTopology
+
+
+def _best(fn, repeat: int) -> float:
+    """Best-of-N rate in commands/s (max over runs: least-noise)."""
+    best = 0.0
+    for _ in range(repeat):
+        rate = fn()
+        if rate > best:
+            best = rate
+    return best
+
+
+def bench_bank(cfg: PimConfig, cmds, repeat: int) -> float:
+    timer = BankTimer(cfg)
+
+    def run():
+        t0 = time.perf_counter()
+        timer.simulate(cmds)
+        return len(cmds) / (time.perf_counter() - t0)
+
+    return _best(run, repeat)
+
+
+def bench_channel(cfg: PimConfig, cmds, banks: int, repeat: int) -> float:
+    def run():
+        ctrl = ChannelController(cfg)
+        for i in range(banks):
+            ctrl.enqueue(ctrl.add_bank(), cmds, job_id=i)
+        t0 = time.perf_counter()
+        ctrl.drain()
+        return banks * len(cmds) / (time.perf_counter() - t0)
+
+    return _best(run, repeat)
+
+
+def bench_device(cfg: PimConfig, cmds, channels: int, banks_per: int,
+                 repeat: int) -> float:
+    topo = DeviceTopology(channels=channels, banks_per_rank=banks_per)
+
+    def run():
+        dev = DeviceEngine(cfg, topo)
+        for f in range(topo.total_banks):
+            dev.enqueue_flat(f, cmds, job_id=f)
+        t0 = time.perf_counter()
+        dev.drain()
+        return topo.total_banks * len(cmds) / (time.perf_counter() - t0)
+
+    return _best(run, repeat)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=4096, help="NTT size per stream")
+    ap.add_argument("--nb", type=int, default=2, help="atom buffers")
+    ap.add_argument("--repeat", type=int, default=3, help="best-of-N runs")
+    ap.add_argument("--min-rate", type=float, default=None, metavar="CMDS_PER_S",
+                    help="fail (exit 1) if the channel leg is slower")
+    args = ap.parse_args()
+
+    cfg = PimConfig(num_buffers=args.nb)
+    cmds = RowCentricMapper(cfg, args.n).commands()
+    print("name,cmds_per_s,detail")
+    bank = bench_bank(cfg, cmds, args.repeat)
+    print(f"engine/bank/N={args.n},{bank:.0f},single BankEngine in program order")
+    chan = bench_channel(cfg, cmds, 8, args.repeat)
+    print(f"engine/channel/N={args.n}/banks=8,{chan:.0f},one shared bus rr arbiter")
+    dev = bench_device(cfg, cmds, 4, 4, args.repeat)
+    print(f"engine/device/N={args.n}/4ch_x4ba,{dev:.0f},DeviceEngine.drain")
+
+    if args.min_rate is not None and chan < args.min_rate:
+        print(f"FAIL: channel rate {chan:.0f} < floor {args.min_rate:.0f}",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

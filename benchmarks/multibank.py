@@ -14,16 +14,23 @@ compiled plan per sweep, replayed across points):
   4. (--sharded) ONE large NTT four-step-sharded over 2..32 banks
      across channels: speedup and exchange-phase bus occupancy vs the
      single-bank `BankTimer` baseline (`repro.pimsys.sharded`)
+  5. (--param-cache) the device-side twiddle-parameter cache
+     (`PimConfig.param_cache_entries`, `repro.pimsys.engine`): bank
+     sweep at several cache sizes — entries=0 is the seed model whose
+     (w0, r_w) bus beats set the multibank knee; the emitted hit rate
+     and speedup columns show the knee moving
 
-`--json PATH` additionally writes every sweep point as machine-readable
-JSON (runtime plus the parsed derived metrics: speedup, efficiency, bus
-occupancy, ...) so the perf trajectory is tracked across PRs; smoke.sh
-regenerates `BENCH_multibank.json`, which is committed — the simulator
-is deterministic, so a diff in that file IS a perf change.
+`--all` runs every sweep; `--json PATH` additionally writes every sweep
+point as machine-readable JSON (runtime plus the parsed derived metrics:
+speedup, efficiency, bus occupancy, hit rate, ...) so the perf
+trajectory is tracked across PRs; smoke.sh checks the fresh sweep
+against the committed `BENCH_multibank.json` (>10% latency regression
+fails, `scripts/perf_check.py`) and then refreshes it — the simulator is
+deterministic, so a diff in that file IS a perf change.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.multibank [--quick] [--sharded] \
-        [--json BENCH_multibank.json]
+        [--param-cache] [--all] [--json BENCH_multibank.json]
     PYTHONPATH=src python -m benchmarks.run --only multibank
 """
 import argparse
@@ -134,6 +141,36 @@ def run_sharded(emit, quick: bool = False):
                    bank_counts=[2, 4, 8, 16, 32], nbs=(2, 4))
 
 
+def _param_cache_sweep(emit, sizes, bank_counts, entries_list, nb=2):
+    """Same workload as `_bank_sweep`, across device-side parameter-cache
+    sizes.  entries=0 charges the seed model's flat `param_load_cycles`
+    per CU op; a hit pays one re-select beat, so the bus knee moves
+    right as the hit rate climbs."""
+    for n in sizes:
+        for entries in entries_list:
+            sess = PimSession(PimConfig(num_buffers=nb,
+                                        param_cache_entries=entries))
+            for banks in bank_counts:
+                r = sess.run(sess.compile(BatchOp(NttOp(n), banks))).timing
+                emit(
+                    f"paramcache/N={n}/entries={entries}/banks={banks}",
+                    r.latency_ns / 1e3,
+                    f"speedup=x{r.speedup:.2f};eff={r.efficiency:.2f};"
+                    f"bus={r.bus_utilization:.2f};"
+                    f"hit_rate={r.param_hit_rate:.2f};"
+                    f"analytic_lb_us={r.analytic_latency_ns / 1e3:.1f}",
+                )
+
+
+def run_param_cache(emit, quick: bool = False):
+    if quick:
+        _param_cache_sweep(emit, sizes=[1024], bank_counts=[4, 16],
+                           entries_list=[0, 8])
+        return
+    _param_cache_sweep(emit, sizes=[1024, 4096], bank_counts=[4, 8, 16, 32],
+                       entries_list=[0, 4, 16, 64])
+
+
 # --------------------------------------------------------------------------
 # machine-readable output (--json): the cross-PR perf trajectory artifact
 # --------------------------------------------------------------------------
@@ -180,6 +217,11 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="run the sharded-NTT sweep instead of the "
                          "independent-jobs sweeps")
+    ap.add_argument("--param-cache", action="store_true",
+                    help="run the device-side twiddle-parameter-cache "
+                         "sweep instead of the independent-jobs sweeps")
+    ap.add_argument("--all", action="store_true",
+                    help="run every sweep (base + sharded + param-cache)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write every sweep point as JSON "
                          "(e.g. BENCH_multibank.json)")
@@ -189,10 +231,13 @@ def main():
     sink = collecting_emit(emit, records) if args.json else emit
 
     print("name,us_per_call,derived")
-    if args.sharded:
-        run_sharded(sink, quick=args.quick)
-    else:
+    base = args.all or not (args.sharded or args.param_cache)
+    if base:
         run(sink, quick=args.quick)
+    if args.sharded or args.all:
+        run_sharded(sink, quick=args.quick)
+    if args.param_cache or args.all:
+        run_param_cache(sink, quick=args.quick)
 
     if args.json:
         with open(args.json, "w") as f:
@@ -200,7 +245,8 @@ def main():
                 {
                     "benchmark": "multibank",
                     "quick": args.quick,
-                    "sharded": args.sharded,
+                    "sharded": args.sharded or args.all,
+                    "param_cache": args.param_cache or args.all,
                     "points": records,
                 },
                 f, indent=2)

@@ -1,0 +1,119 @@
+"""Generate `tests/golden/engine_goldens.json` — frozen cycle counts.
+
+The hierarchical resource engine (`repro.pimsys.engine`) must keep the
+default-config timing model bit-identical to the seed simulator: with
+`param_cache_entries=0` and one rank per channel, command lists and
+cycle counts may not move.  This script records exact latencies (ns as
+Python float repr, which JSON round-trips losslessly) for a matrix of
+single-bank, multibank, sharded, and scheduler workloads; the regression
+test `tests/test_engine.py::test_golden_cycles_bit_identical` replays the
+matrix and asserts equality.
+
+Regenerating this file is a DELIBERATE act (a conscious timing-model
+change), never a side effect of a refactor:
+
+    PYTHONPATH=src python scripts/gen_engine_goldens.py
+"""
+import json
+import os
+import warnings
+
+import numpy as np
+
+
+def build() -> dict:
+    from repro.core.mapping import RowCentricMapper
+    from repro.core.pim_config import PimConfig
+    from repro.core.pimsim import BankTimer, analytic_multibank_bound
+    from repro.pimsys import (
+        ChannelController,
+        NttJob,
+        PolymulJob,
+        RequestScheduler,
+        ShardedNttPlan,
+    )
+
+    out: dict = {"single": [], "multibank": [], "sharded": [], "scheduler": []}
+
+    # single bank: the paper's own simulator surface
+    for n in (256, 1024, 4096):
+        for nb in (1, 2, 4, 6):
+            for forward in (False, True):
+                cfg = PimConfig(num_buffers=nb)
+                cmds = RowCentricMapper(cfg, n, forward=forward).commands()
+                r = BankTimer(cfg).simulate(cmds)
+                out["single"].append({
+                    "n": n, "nb": nb, "forward": forward,
+                    "commands": len(cmds), "ns": r.ns,
+                    "stats": dict(sorted(r.stats.items())),
+                })
+
+    # multibank: shared-bus contention through the channel controller
+    for n, nb in ((1024, 2), (1024, 4), (4096, 2)):
+        cfg = PimConfig(num_buffers=nb)
+        cmds = RowCentricMapper(cfg, n).commands()
+        for banks in (2, 4, 8, 16):
+            for policy in ("rr", "ready"):
+                ctrl = ChannelController(cfg, policy=policy)
+                for i in range(banks):
+                    ctrl.enqueue(ctrl.add_bank(), cmds, job_id=i)
+                ctrl.drain()
+                out["multibank"].append({
+                    "n": n, "nb": nb, "banks": banks, "policy": policy,
+                    "latency_ns": ctrl.makespan_ns,
+                    "bus_busy_ns": ctrl.bus_busy_ns,
+                    "analytic_ns": analytic_multibank_bound(n, banks, cfg),
+                })
+
+    # sharded: four-step split incl. the exchange phase
+    sharded_cases = [
+        (PimConfig(num_buffers=2, num_channels=2, num_banks=2), 256, 4),
+        (PimConfig(num_buffers=4, num_channels=1, num_banks=2), 512, 2),
+        (PimConfig(num_buffers=2, num_channels=2, num_banks=4), 4096, 8),
+    ]
+    for cfg, n, banks in sharded_cases:
+        for forward in (False, True):
+            r = ShardedNttPlan(cfg, n, banks, forward=forward).simulate(
+                baseline=False)
+            out["sharded"].append({
+                "n": n, "banks": banks, "forward": forward,
+                "nb": cfg.num_buffers, "channels": cfg.num_channels,
+                "banks_per_rank": cfg.num_banks,
+                "latency_ns": r.latency_ns,
+                "local_ns": r.local_ns,
+                "exchange_ns": r.exchange_ns,
+                "xfer_atoms": r.xfer_atoms,
+                "xfer_hops": r.xfer_hops,
+            })
+
+    # scheduler: closed- and open-loop completion times
+    cfg = PimConfig(num_buffers=2, num_channels=2, num_banks=2)
+    jobs = [NttJob(512), PolymulJob(256), NttJob(1024), NttJob(512),
+            PolymulJob(512), NttJob(256)]
+    closed = RequestScheduler(cfg).run_closed_loop(jobs)
+    open_ = RequestScheduler(cfg).run_open_loop(jobs, rate_per_us=0.1, seed=3)
+    out["scheduler"].append({
+        "closed_done_ns": [float(x) for x in closed.done_ns],
+        "closed_makespan_ns": closed.makespan_ns,
+        "open_done_ns": [float(x) for x in open_.done_ns],
+        "open_makespan_ns": open_.makespan_ns,
+    })
+    return out
+
+
+def main():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        data = build()
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "tests", "golden", "engine_goldens.json")
+    path = os.path.normpath(path)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+    n = sum(len(v) for v in data.values())
+    print(f"wrote {n} golden records to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Perf-regression gate over `BENCH_multibank.json` sweeps.
+
+Compares a freshly generated sweep against the committed baseline,
+point by point (matched on the `name` column): any point whose
+`us_per_call` latency regresses more than `--tol` (default 10%) fails
+the check.  Points present only on one side are reported but never
+fail — new sweeps (e.g. a just-added `--param-cache` column) should not
+require a baseline to exist first.  The simulator is deterministic, so
+a regression here is a timing-model or scheduling change, not noise.
+
+Usage (what `scripts/smoke.sh` runs):
+    python scripts/perf_check.py NEW.json BENCH_multibank.json --tol 0.10
+"""
+import argparse
+import json
+import sys
+
+
+def load_points(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {p["name"]: p for p in data.get("points", [])}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new", help="freshly generated sweep JSON")
+    ap.add_argument("baseline", help="committed BENCH_multibank.json")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="allowed fractional latency regression (default 0.10)")
+    args = ap.parse_args()
+
+    new, base = load_points(args.new), load_points(args.baseline)
+    shared = sorted(set(new) & set(base))
+    only_new = sorted(set(new) - set(base))
+    only_base = sorted(set(base) - set(new))
+
+    failures = []
+    worst = (0.0, None)
+    for name in shared:
+        b, n = base[name].get("us_per_call", 0.0), new[name].get("us_per_call", 0.0)
+        if b <= 0.0:
+            continue  # knee markers and other zero-latency annotation rows
+        ratio = n / b - 1.0
+        if ratio > worst[0]:
+            worst = (ratio, name)
+        if ratio > args.tol:
+            failures.append((name, b, n, ratio))
+
+    print(f"perf_check: {len(shared)} shared points "
+          f"({len(only_new)} new-only, {len(only_base)} baseline-only), "
+          f"tol {args.tol:.0%}")
+    if worst[1] is not None:
+        print(f"perf_check: worst regression {worst[0]:+.1%} at {worst[1]}")
+    for name, b, n, ratio in failures:
+        print(f"perf_check: REGRESSION {name}: {b:.2f}us -> {n:.2f}us "
+              f"({ratio:+.1%})", file=sys.stderr)
+    if failures:
+        return 1
+    print("perf_check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

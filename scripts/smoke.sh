@@ -15,15 +15,26 @@ BENCH_TIMEOUT="${SMOKE_BENCH_TIMEOUT:-120}"
 echo "== smoke: fast tier-1 subset (-m 'not slow', ${TEST_TIMEOUT}s budget) =="
 timeout "${TEST_TIMEOUT}" python -m pytest -q -m "not slow" \
     tests/test_core_ntt.py tests/test_pim_sim.py tests/test_pimsys.py \
+    tests/test_engine.py tests/test_engine_props.py \
     tests/test_sharded.py tests/test_sharded_props.py \
     tests/test_session.py tests/test_session_props.py
 
-echo "== smoke: device-level benchmark (--quick --json, ${BENCH_TIMEOUT}s budget) =="
-timeout "${BENCH_TIMEOUT}" python -m benchmarks.multibank --quick \
-    --json BENCH_multibank.json
+echo "== smoke: device benchmark + perf-regression gate (${BENCH_TIMEOUT}s budget) =="
+# full quick sweep (base + sharded + param-cache) to a staging file,
+# gate >10% latency regressions against the committed baseline, then
+# refresh the committed JSON — a perf change must arrive as a diff,
+# never as a silent drift
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.multibank --quick --all \
+    --json BENCH_multibank.json.new
+python scripts/perf_check.py BENCH_multibank.json.new BENCH_multibank.json \
+    --tol 0.10
+mv BENCH_multibank.json.new BENCH_multibank.json
 
-echo "== smoke: sharded-NTT benchmark (--sharded --quick, ${BENCH_TIMEOUT}s budget) =="
-timeout "${BENCH_TIMEOUT}" python -m benchmarks.multibank --sharded --quick
+echo "== smoke: engine commands/s microbenchmark (${BENCH_TIMEOUT}s budget) =="
+# floor well below the ~2x-optimized rate but above the seed's ~100k
+# cmd/s, so a hot-loop regression fails loudly even on a noisy runner
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.engine_speed --repeat 2 \
+    --min-rate 120000
 
 echo "== smoke: serve_polymul example over the session API (${BENCH_TIMEOUT}s budget) =="
 timeout "${BENCH_TIMEOUT}" python examples/serve_polymul.py \

@@ -162,6 +162,33 @@ def twiddle_index(n: int, stride: int, global_offset: int) -> int:
     return h + global_offset // (2 * stride)
 
 
+def cu_twiddle_indices(cfg: PimConfig, n: int, cmd) -> tuple[int, ...] | None:
+    """Global twiddle-table indices one CU op's (w0, r_w) parameter
+    program resolves, or None for ops without a generator program
+    (CMul's pointwise operands, non-CU commands).
+
+    THE single definition of program identity: the session's functional
+    `twiddle_param_stream` and the engine's parameter-cache keys
+    (`pimsys.engine.param_program_key`) both derive from it, so the
+    replayed values and the cached residency can never disagree.  `n`
+    is the GLOBAL transform size (sharded local streams resolve the
+    full table through their shifted bases).  Stage-h prefixing makes
+    index tuples disjoint across strides (index = h + B with B < h),
+    so the tuple alone identifies the stage geometry.
+    """
+    cls = cmd.__class__
+    if cls is C2:
+        return tuple(twiddle_index(n, cmd.stride, b) for b in cmd.bases_u)
+    if cls is C1:
+        Na = cfg.atom_words
+        strides = stage_strides(Na, not cmd.gs)[cmd.stages_lo:cmd.stages_hi]
+        return tuple(twiddle_index(n, t, cmd.base + k)
+                     for t in strides for k in range(0, Na, 2 * t))
+    if cls is BUWord:
+        return (twiddle_index(n, cmd.stride, cmd.base_u),)
+    return None
+
+
 # --------------------------------------------------------------------------
 # The mapper (memory controller model)
 # --------------------------------------------------------------------------

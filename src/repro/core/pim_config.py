@@ -46,6 +46,29 @@ class PimConfig:
     #                                 16-bit chunks "in multiple cycles" (§IV-A)
     cu_clock_mhz: float = 1200.0    # scaled in the Fig 8 experiment
 
+    # -- device-side twiddle-parameter cache (repro.pimsys.engine) ----------
+    # LRU cache of recently-used (w0, r_w) parameter programs at each
+    # bank's CU (the §V "per-application buffer" idea applied to the
+    # per-CU-op parameter stream that sets the multibank bus knee): a
+    # miss streams the full `param_load_cycles` beats over the shared
+    # bus, a hit pays a single re-select beat.  0 = no cache (the seed
+    # timing model, charged flat per CU op).
+    param_cache_entries: int = 0
+
+    # -- rank-level timing (repro.pimsys.engine.RankState) ------------------
+    # DRAM rank constraints in cycles at `dram_clock_mhz`, shared by the
+    # banks of one rank: tFAW (at most 4 ACTs per rank in any tFAW
+    # window), tRRD (ACT-to-ACT within a rank), and tRTW/tWTR data-bus
+    # turnaround when consecutive same-rank column accesses switch
+    # direction.  All default to 0 — the seed model's idealized rank,
+    # kept as the differential anchor (banks=1 and the committed golden
+    # cycle counts are bit-identical by construction).  HBM2E-class
+    # values to enable them: tFAW=24, tRRD=4, tRTW=8, tWTR=5.
+    tFAW: int = 0
+    tRRD: int = 0
+    tRTW: int = 0
+    tWTR: int = 0
+
     # -- refresh (DRAMsim3 models it; approximated as a stall window) -------
     tREFI_ns: float = 3900.0
     tRFC_ns: float = 260.0

@@ -28,6 +28,12 @@ The pre-session entry points (`core.pimsim.simulate_ntt`,
 session, bit-identical in values, cycles, and command lists.
 """
 from repro.pimsys.controller import ChannelController, Completion, Device
+from repro.pimsys.engine import (
+    ChannelEngine,
+    DeviceEngine,
+    RankState,
+    param_beat_trace,
+)
 from repro.pimsys.scheduler import (
     NttJob,
     PolymulJob,
@@ -62,9 +68,11 @@ __all__ = [
     "BankAddress",
     "BatchOp",
     "ChannelController",
+    "ChannelEngine",
     "CompiledPlan",
     "Completion",
     "Device",
+    "DeviceEngine",
     "DeviceTopology",
     "ExchangePair",
     "ExchangeStage",
@@ -74,6 +82,7 @@ __all__ = [
     "PimSession",
     "PolymulJob",
     "PolymulOp",
+    "RankState",
     "RequestScheduler",
     "RunResult",
     "SchedulerResult",
@@ -88,6 +97,7 @@ __all__ = [
     "job_commands",
     "load_trace",
     "loads_trace",
+    "param_beat_trace",
     "replay_trace",
     "twiddle_param_stream",
 ]

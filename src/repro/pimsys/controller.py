@@ -1,277 +1,36 @@
-"""Per-channel memory controller: many NTT-PIM banks, ONE command bus.
+"""Per-channel memory controller: thin driver of `repro.pimsys.engine`.
 
-`core.pimsim.BankTimer` times a single bank with an implicit private bus.
-At the device level all banks in a channel share one command/address bus
-(and NTT-PIM streams (w0, r_w) twiddle parameters over it per CU op,
-§IV-A), so the controller must *arbitrate*: each simulated step it grants
-the bus to one bank and issues that bank's next command through the
-bank's own `BankEngine` — the exact hazard/resource model of the paper's
-single-bank simulator.  With one bank the grant sequence degenerates to
-program order and the timing is bit-identical to `BankTimer`.
-
-Arbitration policies:
-  rr      round-robin over banks whose head command is ready at the
-          earliest grant time (fair, FCFS-like)
-  ready   ready-first (FR-FCFS flavor): grant the bank whose head command
-          would *start* soonest given its internal hazards, so a bank
-          stalled on tRAS/CU latency does not block a ready neighbor
-
-Causality note: commands become visible to the arbiter at their `gate`
-time (job dispatch time), so open-loop traffic injected by the scheduler
-contends only with commands that actually coexist with it.
+`ChannelController` and `Device` are the established device-facing names
+for the channel and device layers of the hierarchical resource engine;
+since the engine refactor they ARE those layers — one command-issue path
+(`engine.ChannelEngine` / `engine.DeviceEngine`: shared-bus arbitration
+→ `RankState` tFAW/turnaround windows → `core.pimsim.BankEngine` bank
+hazards → CU), not a parallel implementation.  With one bank the grant
+sequence degenerates to program order and the timing is bit-identical to
+`BankTimer` by construction; see the engine module docstring for the
+layering, arbitration policies, and the device-side twiddle-parameter
+cache model.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from collections import deque
+from repro.pimsys.engine import (
+    POLICIES,
+    ChannelEngine,
+    Completion,
+    DeviceEngine,
+)
 
-from repro.core.mapping import Command, Mark
-from repro.core.pimsim import BankEngine
-from repro.core.pim_config import PimConfig
-from repro.pimsys.stats import StatsRegistry
-from repro.pimsys.topology import DeviceTopology
-
-POLICIES = ("rr", "ready")
-
-_INF = math.inf
+__all__ = ["POLICIES", "ChannelController", "Completion", "Device"]
 
 
-@dataclasses.dataclass(frozen=True)
-class Completion:
-    """A job's last command finished on `channel`/`bank` at `done` ns."""
+class ChannelController(ChannelEngine):
+    """One command/address bus shared by bank ports (`ChannelEngine`)."""
 
-    job_id: object
-    channel: int
-    bank: int
-    done: float
+    __slots__ = ()
 
 
-class _Job:
-    __slots__ = ("remaining", "max_done")
+class Device(DeviceEngine):
+    """A full PIM device: one `ChannelController` per channel
+    (`DeviceEngine`)."""
 
-    def __init__(self):
-        self.remaining = 0
-        self.max_done = 0.0
-
-
-class ChannelController:
-    """One command/address bus shared by `bank` ports, cycle-level."""
-
-    def __init__(self, cfg: PimConfig, channel_id: int = 0, policy: str = "rr"):
-        if policy not in POLICIES:
-            raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
-        self.cfg = cfg
-        self.channel_id = channel_id
-        self.policy = policy
-        self.bus_free = 0.0
-        self.bus_busy_ns = 0.0
-        self.engines: list[BankEngine] = []
-        self.queues: list[deque] = []  # entries: (cmd, gate, job_id)
-        self._jobs: dict[object, _Job] = {}
-        self._rr = 0  # last granted bank (round-robin pointer)
-        self.issued = 0
-
-    # -- construction --------------------------------------------------------
-    def add_bank(self, pipelined: bool = True) -> int:
-        self.engines.append(BankEngine(self.cfg, pipelined=pipelined))
-        self.queues.append(deque())
-        return len(self.engines) - 1
-
-    def enqueue(self, bank: int, commands, gate: float = 0.0, job_id=None) -> None:
-        """Queue a command stream on `bank`, visible to the arbiter at
-        `gate` (dispatch time).  `Mark`s are phase annotations with no
-        hardware effect and are dropped here, exactly as `BankTimer`
-        ignores them."""
-        q = self.queues[bank]
-        job = None
-        if job_id is not None:
-            job = self._jobs.get(job_id)
-            if job is None:
-                job = self._jobs[job_id] = _Job()
-        n = 0
-        for cmd in commands:
-            if isinstance(cmd, Mark):
-                continue
-            q.append((cmd, gate, job_id))
-            n += 1
-        if job is not None:
-            job.remaining += n
-
-    def occupy_bus(self, not_before: float, hold_ns: float) -> float:
-        """Grant the shared bus for a non-command transaction (an inter-bank
-        atom burst: the paired ColRead/ColWrite transfer a sharded NTT's
-        exchange phase rides on — see `repro.pimsys.sharded`).  Returns the
-        grant time; the bus is busy for `hold_ns` from there."""
-        s = max(not_before, self.bus_free)
-        self.bus_free = s + hold_ns
-        self.bus_busy_ns += hold_ns
-        return s
-
-    def issue_direct(self, bank: int, cmd: Command,
-                     not_before: float = 0.0) -> tuple[float, float]:
-        """Issue one command on `bank` outside the queued arbitration path
-        (the sharded exchange phase drives engines directly), with exactly
-        the bus-grant bookkeeping `advance` applies.  Returns (start, done)."""
-        eng = self.engines[bank]
-        s, done = eng.issue(cmd, max(not_before, self.bus_free))
-        self.bus_free = s + eng.t_bus
-        self.bus_busy_ns += eng.bus_hold(cmd)
-        self.issued += 1
-        return s, done
-
-    # -- arbitration ---------------------------------------------------------
-    def _grant_time(self, bank: int) -> float:
-        q = self.queues[bank]
-        if not q:
-            return _INF
-        return max(self.bus_free, q[0][1])
-
-    def next_grant(self) -> float:
-        """Earliest time any queued command could be granted the bus."""
-        g = _INF
-        for b in range(len(self.queues)):
-            g = min(g, self._grant_time(b))
-        return g
-
-    def _pick(self) -> int | None:
-        n = len(self.queues)
-        if self.policy == "rr":
-            # Fair rotation over banks grantable at the earliest grant time.
-            # Fast path: the first non-empty bank (cyclically after the last
-            # grant) whose head gate <= bus_free is grantable at bus_free,
-            # which is the minimum possible grant — O(1) amortized.
-            bus = self.bus_free
-            best, best_gate = None, _INF
-            for off in range(1, n + 1):
-                b = (self._rr + off) % n
-                q = self.queues[b]
-                if not q:
-                    continue
-                gate = q[0][1]
-                if gate <= bus:
-                    return b
-                if gate < best_gate:
-                    best, best_gate = b, gate
-            return best  # None iff every queue is empty
-        # ready-first: grant whichever grantable head would START soonest
-        best, best_s = None, _INF
-        for off in range(1, n + 1):
-            b = (self._rr + off) % n
-            g = self._grant_time(b)
-            if math.isinf(g):
-                continue
-            s = self.engines[b].earliest_start(self.queues[b][0][0], g)
-            if s < best_s:
-                best, best_s = b, s
-        return best
-
-    # -- simulation ----------------------------------------------------------
-    def advance(self, horizon: float = _INF) -> list[Completion] | None:
-        """Grant the bus once and issue one command.
-
-        Returns completions triggered by that issue ([] if none), or
-        `None` if no queued command can be granted before `horizon`
-        (the scheduler then injects the next arrival).
-        """
-        bank = self._pick()
-        if bank is None:
-            return None
-        # Causality: the guard is on the CHOSEN bank's grant, not the global
-        # minimum — the ready policy may pick a later-gated bank than the
-        # earliest one, and issuing at/after `horizon` would advance the bus
-        # past an arrival the scheduler has not injected yet.
-        grant = max(self.bus_free, self.queues[bank][0][1])
-        if grant >= horizon:
-            return None
-        cmd, gate, job_id = self.queues[bank].popleft()
-        eng = self.engines[bank]
-        s, done = eng.issue(cmd, grant)
-        self.bus_free = s + eng.t_bus
-        self.bus_busy_ns += eng.bus_hold(cmd)
-        self._rr = bank
-        self.issued += 1
-
-        out: list[Completion] = []
-        if job_id is not None:
-            job = self._jobs[job_id]
-            job.max_done = max(job.max_done, done)
-            job.remaining -= 1
-            if job.remaining == 0:
-                out.append(Completion(job_id, self.channel_id, bank, job.max_done))
-                del self._jobs[job_id]
-        return out
-
-    def drain(self) -> list[Completion]:
-        """Run until every queue is empty; return all completions."""
-        out: list[Completion] = []
-        while True:
-            evs = self.advance()
-            if evs is None:
-                return out
-            out.extend(evs)
-
-    # -- results -------------------------------------------------------------
-    @property
-    def makespan_ns(self) -> float:
-        return max((e.end_t for e in self.engines), default=0.0)
-
-    def bank_ns(self, bank: int) -> float:
-        return self.engines[bank].end_t
-
-    def record_stats(self, reg: StatsRegistry) -> None:
-        for b, eng in enumerate(self.engines):
-            reg.add_bank(self.channel_id, b, dict(eng.stats))
-        reg.add_bus(self.channel_id, self.bus_busy_ns, self.makespan_ns)
-
-
-class Device:
-    """A full PIM device: one `ChannelController` per channel.
-
-    Channels have independent buses, so they only interact through the
-    scheduler's placement decisions; `advance` always steps the channel
-    with the earliest grantable command to keep event order causal.
-    """
-
-    def __init__(self, cfg: PimConfig, topo: DeviceTopology | None = None,
-                 policy: str = "rr", pipelined: bool = True):
-        self.cfg = cfg
-        self.topo = topo or DeviceTopology.from_config(cfg)
-        self.channels = [
-            ChannelController(cfg, channel_id=ch, policy=policy)
-            for ch in range(self.topo.channels)
-        ]
-        for ctrl in self.channels:
-            for _ in range(self.topo.banks_per_channel):
-                ctrl.add_bank(pipelined=pipelined)
-
-    def enqueue_flat(self, flat_bank: int, commands, gate: float = 0.0, job_id=None):
-        addr = self.topo.address_of(flat_bank)
-        self.channels[addr.channel].enqueue(
-            self.topo.local_id(addr), commands, gate=gate, job_id=job_id)
-
-    def advance(self, horizon: float = _INF) -> list[Completion] | None:
-        best, best_g = None, _INF
-        for ctrl in self.channels:
-            g = ctrl.next_grant()
-            if g < best_g:
-                best, best_g = ctrl, g
-        if best is None or best_g >= horizon:
-            return None
-        return best.advance(horizon)
-
-    def drain(self) -> list[Completion]:
-        out: list[Completion] = []
-        for ctrl in self.channels:
-            out.extend(ctrl.drain())
-        return out
-
-    @property
-    def makespan_ns(self) -> float:
-        return max(c.makespan_ns for c in self.channels)
-
-    def stats(self) -> StatsRegistry:
-        reg = StatsRegistry()
-        for ctrl in self.channels:
-            ctrl.record_stats(reg)
-        return reg
+    __slots__ = ()

@@ -165,7 +165,8 @@ class RequestScheduler:
         self.topo = topo or DeviceTopology.from_config(cfg)
         self.policy = policy
         self.pipelined = pipelined
-        self._cmd_cache: dict[Job, list[Command]] = {}
+        # job -> (commands, param-cache residency trace or None)
+        self._cmd_cache: dict[Job, tuple[list[Command], tuple | None]] = {}
         # sharded-plan timing cache: only the shard count, orientation and
         # the gang's per-shard channel placement affect the latency.
         # Values are (latency_ns, per-shard counters, per-channel bus
@@ -190,30 +191,42 @@ class RequestScheduler:
         return self._run(list(zip(arrivals.tolist(), jobs)))
 
     # -- plan priming (repro.pimsys.session) ---------------------------------
-    def prime(self, job: Job, commands: Sequence[Command]) -> None:
+    def prime(self, job: Job, commands: Sequence[Command],
+              param_trace=None) -> None:
         """Pre-populate the per-job command cache from a compiled plan.
 
         `PimSession.submit` routes `CompiledPlan`s here so queued traffic
-        replays the plan's frozen stream instead of re-running the mapper
-        per distinct job spec.  The stream must be the job's canonical
-        one (`job_commands` equivalent) — the scheduler trusts the
-        session's compiler for that.
+        replays the plan's frozen stream (and its precomputed
+        parameter-cache residency trace) instead of re-running the
+        mapper per distinct job spec.  The stream must be the job's
+        canonical one (`job_commands` equivalent) — the scheduler trusts
+        the session's compiler for that.
         """
         if isinstance(job, ShardedNttJob):
             raise TypeError("gang jobs have no single-bank stream to prime; "
                             "the sharded plan cache handles them")
         if job_rows(self.cfg, job) > self.cfg.rows_per_bank:
             raise ValueError(f"{job} does not fit in one bank")
-        self._cmd_cache[job] = list(commands)
+        if param_trace is None and self.cfg.param_cache_entries:
+            from repro.pimsys.engine import param_beat_trace
+
+            param_trace = param_beat_trace(self.cfg, job.n, commands)
+        self._cmd_cache[job] = (list(commands), param_trace)
 
     # -- core event loop -----------------------------------------------------
-    def _commands(self, job: Job) -> list[Command]:
-        cmds = self._cmd_cache.get(job)
-        if cmds is None:
+    def _commands(self, job: Job) -> tuple[list[Command], tuple | None]:
+        hit = self._cmd_cache.get(job)
+        if hit is None:
             if job_rows(self.cfg, job) > self.cfg.rows_per_bank:
                 raise ValueError(f"{job} does not fit in one bank")
-            cmds = self._cmd_cache[job] = job_commands(self.cfg, job)
-        return cmds
+            cmds = job_commands(self.cfg, job)
+            trace = None
+            if self.cfg.param_cache_entries:
+                from repro.pimsys.engine import param_beat_trace
+
+                trace = param_beat_trace(self.cfg, job.n, cmds)
+            hit = self._cmd_cache[job] = (cmds, trace)
+        return hit
 
     def _sharded_latency(self, job: ShardedNttJob, flats: Sequence[int]):
         """Latency + stats of a gang job on the banks it was placed on.
@@ -343,8 +356,9 @@ class RequestScheduler:
                 for f in flats:
                     heapq.heappush(free, (done, f))
             else:
-                device.enqueue_flat(picked[0][1], self._commands(job),
-                                    gate=gate, job_id=jid)
+                cmds, trace = self._commands(job)
+                device.enqueue_flat(picked[0][1], cmds, gate=gate,
+                                    job_id=jid, param_trace=trace)
             jid += 1
 
         for ev in device.drain():

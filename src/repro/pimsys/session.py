@@ -23,11 +23,15 @@ Three layers:
   * **`compile(op) -> CompiledPlan`** — a frozen artifact holding the
     command list(s), row/bank placement, the precomputed twiddle-parameter
     stream (one table index per CU op, the functional content of the MC's
-    (w0, r_w) programs), and for sharded ops the `ShardedNttPlan` exchange
-    schedule.  Plans are memoized in a session-level cache keyed by
-    `(cfg, op)`; a second `compile` of an equal op returns the SAME object
-    and a repeated `run` performs zero mapper regeneration
-    (`core.mapping.mapper_generations` counts, tests assert).
+    (w0, r_w) programs), the device-side parameter-cache residency trace
+    (`param_trace`, charged identically by `BankTimer`, the channel
+    engine, and the analytic bus bound when
+    `PimConfig.param_cache_entries > 0`), and for sharded ops the
+    `ShardedNttPlan` exchange schedule.  Plans are memoized in a
+    session-level cache keyed by `(cfg, op)`; a second `compile` of an
+    equal op returns the SAME object and a repeated `run` performs zero
+    mapper regeneration (`core.mapping.mapper_generations` counts, tests
+    assert).
   * **`run(plan, *inputs) -> RunResult`** — one result type unifying the
     functional output, `TimingResult` / `ShardedTimingResult` /
     `MultiBankResult` / `SchedulerResult`, a `StatsRegistry` snapshot, and
@@ -50,14 +54,10 @@ import numpy as np
 from repro.core import modmath as mm
 from repro.core import ntt as ntt_ref
 from repro.core.mapping import (
-    BUWord,
-    C1,
-    C2,
     Command,
     FunctionalBank,
     RowCentricMapper,
-    stage_strides,
-    twiddle_index,
+    cu_twiddle_indices,
 )
 from repro.core.pim_config import PimConfig
 from repro.core.pimsim import (
@@ -181,19 +181,11 @@ def twiddle_param_stream(cfg: PimConfig, n: int,
     size (a sharded local stream resolves against the full table via its
     shifted bases, so the same function covers both).
     """
-    Na = cfg.atom_words
     out: list[tuple[int, ...]] = []
     for cmd in commands:
-        if isinstance(cmd, C1):
-            strides = stage_strides(Na, not cmd.gs)[cmd.stages_lo:cmd.stages_hi]
-            out.append(tuple(
-                twiddle_index(n, t, cmd.base + k)
-                for t in strides for k in range(0, Na, 2 * t)))
-        elif isinstance(cmd, C2):
-            out.append(tuple(
-                twiddle_index(n, cmd.stride, base) for base in cmd.bases_u))
-        elif isinstance(cmd, BUWord):
-            out.append((twiddle_index(n, cmd.stride, cmd.base_u),))
+        idx = cu_twiddle_indices(cfg, n, cmd)
+        if idx is not None:
+            out.append(idx)
     return tuple(out)
 
 
@@ -237,6 +229,8 @@ class CompiledPlan:
     count: int = 1
     _twiddle_cache: tuple | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
+    _param_trace_cache: tuple = dataclasses.field(
+        default=("unset",), init=False, repr=False, compare=False)
 
     @property
     def twiddle_params(self) -> tuple:
@@ -255,6 +249,30 @@ class CompiledPlan:
                 val = twiddle_param_stream(self.cfg, self.op.n, self.commands)
             object.__setattr__(self, "_twiddle_cache", val)
         return self._twiddle_cache
+
+    @property
+    def param_trace(self):
+        """Per-CU-op (bus_beats, hit/miss) residency trace of the
+        device-side twiddle-parameter cache (`engine.param_beat_trace`),
+        or None when `cfg.param_cache_entries == 0`.  Precomputed once
+        per plan — `run()` replays it with zero regeneration — and
+        charged identically by `BankTimer`, the channel engine, and the
+        analytic bus bound."""
+        cached = self._param_trace_cache
+        if cached == ("unset",):
+            from repro.pimsys.engine import param_beat_trace
+
+            if self.inner is not None:
+                val = self.inner.param_trace
+            elif self.sharded_plan is not None:
+                # per-bank traces live on the sharded plan (used by its
+                # simulate/analytic bound); surface them as a tuple
+                val = tuple(self.sharded_plan.local_param_traces())
+            else:
+                val = param_beat_trace(self.cfg, self.op.n, self.commands)
+            object.__setattr__(self, "_param_trace_cache", (val,))
+            return val
+        return cached[0]
 
     def job(self):
         """The `RequestScheduler` job spec this plan executes as."""
@@ -278,6 +296,27 @@ class CompiledPlan:
                 return {(0, i): list(self.inner.commands) for i in range(self.count)}
             return None
         return {(0, 0): list(self.commands)}
+
+    def param_trace_streams(self) -> dict[tuple[int, int], tuple] | None:
+        """Cache-residency traces keyed like `trace_streams()` — exactly
+        the mapping `pimsys.trace.replay_trace(param_traces=...)` takes
+        to replay a cache-enabled recording bit-exactly.  None when the
+        cache is disabled or the workload has no static placement."""
+        if self.param_trace is None:
+            return None
+        if self.sharded_plan is not None:
+            sp = self.sharded_plan
+            traces = sp.local_param_traces()
+            out = {}
+            for b in range(sp.banks):
+                addr = sp.topo.address_of(sp.flat_banks[b])
+                out[(addr.channel, sp.topo.local_id(addr))] = traces[b]
+            return out
+        if isinstance(self.op, BatchOp):
+            if isinstance(self.op.op, NttOp):
+                return {(0, i): self.inner.param_trace for i in range(self.count)}
+            return None
+        return {(0, 0): self.param_trace}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -372,7 +411,8 @@ class PimSession:
         if hit is None:
             plan = self.compile(NttOp(n, forward=forward))
             hit = self._baselines[key] = BankTimer(
-                self.cfg, pipelined=self.pipelined).simulate(plan.commands)
+                self.cfg, pipelined=self.pipelined).simulate(
+                    plan.commands, plan.param_trace)
         return hit
 
     # -- compile -------------------------------------------------------------
@@ -503,7 +543,8 @@ class PimSession:
                 value = np.asarray(mm.np_mulmod(value, ctx.n_inv, ctx.q), np.uint32)
         timing = None
         if time:
-            timing = BankTimer(cfg, pipelined=self.pipelined).simulate(plan.commands)
+            timing = BankTimer(cfg, pipelined=self.pipelined).simulate(
+                plan.commands, plan.param_trace)
         return self._single_bank_result(op, value, timing, plan)
 
     def _run_polymul(self, plan, inputs, ctx, time) -> RunResult:
@@ -533,7 +574,8 @@ class PimSession:
             value = np.asarray(mm.np_mulmod(value, ctx.n_inv, ctx.q), np.uint32)
         timing = None
         if time:
-            timing = BankTimer(cfg, pipelined=self.pipelined).simulate(plan.commands)
+            timing = BankTimer(cfg, pipelined=self.pipelined).simulate(
+                plan.commands, plan.param_trace)
         return self._single_bank_result(op, value, timing, plan)
 
     def _run_sharded(self, plan, inputs, ctx, single, time) -> RunResult:
@@ -566,17 +608,21 @@ class PimSession:
         inner: NttOp = op.op
         cfg, banks = self.cfg, op.count
         single = single or self.baseline(inner.n, inner.forward)
+        trace = plan.param_trace  # one device-side cache per bank, same stream
         ctrl = ChannelController(cfg, policy=self.policy)
         for i in range(banks):
             ctrl.enqueue(ctrl.add_bank(pipelined=self.pipelined),
-                         plan.inner.commands, job_id=i)
+                         plan.inner.commands, job_id=i, param_trace=trace)
         ctrl.drain()
         latency = ctrl.makespan_ns
-        analytic = analytic_multibank_bound(inner.n, banks, cfg, single)
+        analytic = analytic_multibank_bound(inner.n, banks, cfg, single,
+                                            param_trace=trace)
         if latency < analytic - 1e-6:  # not an assert: must survive python -O
             raise RuntimeError(
                 f"controller beat the analytic bus bound: {latency} < {analytic}")
         speedup = banks * single.ns / latency
+        stats = StatsRegistry()
+        ctrl.record_stats(stats)
         timing = MultiBankResult(
             banks=banks,
             latency_ns=latency,
@@ -585,9 +631,8 @@ class PimSession:
             bus_utilization=min(1.0, ctrl.bus_busy_ns / latency),
             analytic_latency_ns=analytic,
             policy=self.policy,
+            param_hit_rate=stats.param_hit_rate(),
         )
-        stats = StatsRegistry()
-        ctrl.record_stats(stats)
         return RunResult(op=op, value=None, timing=timing, stats=stats,
                          trace=_trace(plan))
 
@@ -625,7 +670,7 @@ class PimSession:
         job = plan.job()
         sched = self.scheduler()
         if not isinstance(job, ShardedNttJob):
-            sched.prime(job, plan.commands)
+            sched.prime(job, plan.commands, param_trace=plan.param_trace)
         jobs = [job] * count
         if rate_per_us is None:
             res = sched.run_closed_loop(jobs)

@@ -33,12 +33,19 @@ At banks=1 the plan degenerates to the single `RowCentricMapper` stream
 -- command-list identical, and (through the one-bank controller) timed
 bit-identically to `BankTimer`; `tests/test_sharded.py` asserts both.
 
-Timing reuses the real machinery end to end: phase A(/B) local streams
-run through `pimsys.controller.Device` (per-channel bus arbitration over
-`BankEngine`s), and the exchange phase issues genuine Act/ColRead/C2/
-ColWrite commands into the SAME engines -- butterfly compute happens on
-the u-bank's CU, hazards and refresh included -- with the inter-bank
-burst modeled as shared-bus occupancy.  Functional execution
+Timing is a thin driver of the hierarchical resource engine
+(`repro.pimsys.engine`) end to end: phase A(/B) local streams run
+through `DeviceEngine` (per-channel bus arbitration -> rank windows ->
+`BankEngine` hazards), and the exchange phase issues genuine
+Act/ColRead/C2/ColWrite commands into the SAME engines via
+`issue_direct` -- butterfly compute happens on the u-bank's CU, hazards,
+refresh, and rank tFAW/turnaround windows included -- with the
+inter-bank burst modeled as shared-bus occupancy (`DeviceEngine.burst`).
+The device-side twiddle-parameter cache reaches both phases: local
+streams replay their plan-level residency traces
+(`local_param_traces`), and exchange C2s hit after the first atom of
+each pair (one shared twiddle per pair; each phase's cache starts cold,
+a conservative simplification).  Functional execution
 (`run_functional`, surfaced as `core.polymul.pim_ntt_sharded`) drives
 one `FunctionalBank` per bank and is asserted bit-equal to `core.ntt`.
 """
@@ -67,6 +74,11 @@ from repro.core.mapping import (
 from repro.core.pim_config import PimConfig
 from repro.core.pimsim import BankEngine, TimingResult, _time_ntt
 from repro.pimsys.controller import ChannelController, Device
+from repro.pimsys.engine import (
+    param_beat_trace,
+    param_hit_beats,
+    trace_param_beats,
+)
 from repro.pimsys.stats import StatsRegistry
 from repro.pimsys.topology import DeviceTopology
 
@@ -183,6 +195,7 @@ class ShardedNttPlan:
             self.topo.address_of(f)  # range check
         self._local_streams: list[list[Command]] | None = None
         self._exchange_stages: list[ExchangeStage] | None = None
+        self._local_traces: list | None = None
 
     # -- command-level structure --------------------------------------------
     def local_streams(self) -> list[list[Command]]:
@@ -199,6 +212,19 @@ class ShardedNttPlan:
                 for b in range(self.banks)
             ]
         return self._local_streams
+
+    def local_param_traces(self) -> list:
+        """Per-bank `engine.param_beat_trace` residency traces (the
+        device-side twiddle-parameter cache model), resolved against the
+        GLOBAL transform size through the shifted twiddle bases.  Cached
+        like `local_streams`: every simulate() replays one precomputed
+        trace ([None]*banks when the cache is disabled)."""
+        if self._local_traces is None:
+            self._local_traces = [
+                param_beat_trace(self.cfg, self.n, s)
+                for s in self.local_streams()
+            ]
+        return self._local_traces
 
     def exchange_stages(self) -> list[ExchangeStage]:
         """Cross-bank stages, in execution order for this orientation.
@@ -295,13 +321,17 @@ class ShardedNttPlan:
 
         The channel bus serializes its banks' command+parameter traffic;
         the pass cannot finish before the busiest channel drains, nor
-        before a lone sub-NTT would on a private bus."""
+        before a lone sub-NTT would on a private bus.  Parameter beats
+        come from each stream's cache-residency trace when the
+        device-side parameter cache is enabled (the engine charges
+        exactly those beats, so the bound stays a bound)."""
         cfg = self.cfg
         per_channel: dict[int, float] = {}
+        traces = self.local_param_traces()
         for b, cmds in enumerate(self.local_streams()):
             n_cmds = sum(1 for c in cmds if not isinstance(c, Mark))
             cu = sum(1 for c in cmds if isinstance(c, (C1, C2, CMul)))
-            bus_ns = (n_cmds + cfg.param_load_cycles * cu) * cfg.dram_ns
+            bus_ns = (n_cmds + trace_param_beats(cfg, traces[b], cu)) * cfg.dram_ns
             ch = self.topo.address_of(self.flat_banks[b]).channel
             per_channel[ch] = per_channel.get(ch, 0.0) + bus_ns
         return max(per_channel.values(), default=0.0)
@@ -314,11 +344,14 @@ class ShardedNttPlan:
         ctrl, local = self._port(dev, sub)
         return ctrl, ctrl.engines[local]
 
-    def _issue(self, dev: Device, sub: int, cmd: Command, not_before: float = 0.0):
+    def _issue(self, dev: Device, sub: int, cmd: Command, not_before: float = 0.0,
+               param_ns: float | None = None, code: int = 0):
         """Issue one exchange-phase command through the bank's real engine,
-        holding its channel's shared bus exactly as the arbiter would."""
+        holding its channel's shared bus (and rank windows) exactly as
+        the arbiter would."""
         ctrl, local = self._port(dev, sub)
-        return ctrl.issue_direct(local, cmd, not_before)
+        return ctrl.issue_direct(local, cmd, not_before, param_ns=param_ns,
+                                 code=code)
 
     def _open(self, dev: Device, sub: int, row: int, not_before: float = 0.0) -> float:
         _, eng = self._engine(dev, sub)
@@ -328,25 +361,15 @@ class ShardedNttPlan:
         return not_before
 
     def _transfer(self, dev: Device, src: int, dst: int, earliest: float) -> float:
-        """Move one atom src-bank -> dst-bank buffer over the shared bus.
-
-        Same channel: one bus burst.  Cross-channel: both buses are held
-        for the burst and the hop latency is added to the arrival time.
-        Returns the arrival time at the destination buffer."""
-        cfg = self.cfg
-        hold = cfg.xfer_beats_per_atom * cfg.dram_ns
+        """Move one atom src-bank -> dst-bank buffer over the shared bus
+        (`DeviceEngine.burst`: same-channel = one bus hold, cross-channel
+        = both buses held + hop latency).  Returns the arrival time at
+        the destination buffer."""
         ch_s = self.topo.address_of(self.flat_banks[src]).channel
         ch_d = self.topo.address_of(self.flat_banks[dst]).channel
-        cs = dev.channels[ch_s]
-        if ch_s == ch_d:
-            s = cs.occupy_bus(earliest, hold)
-            return s + hold
-        cd = dev.channels[ch_d]
-        s = max(earliest, cs.bus_free, cd.bus_free)
-        cs.occupy_bus(s, hold)
-        cd.occupy_bus(s, hold)
-        self._xfer_hops += 1
-        return s + hold + cfg.channel_hop_cycles * cfg.dram_ns
+        if ch_s != ch_d:
+            self._xfer_hops += 1
+        return dev.burst(ch_s, ch_d, earliest)
 
     def _run_exchange(self, dev: Device, ready: list[float]) -> float | None:
         """Issue every exchange stage into the live engines.
@@ -362,10 +385,25 @@ class ShardedNttPlan:
         bank's local pass ends, so this can precede max(ready)-at-entry;
         the occupancy window must open here, not at the global phase
         boundary.
+
+        Parameter cache: every atom of a pair shares ONE (w0, r_w)
+        program (the pair's single twiddle), so with
+        `param_cache_entries > 0` the u-bank pays a full load on the
+        pair's first butterfly and one re-select beat
+        (`engine.param_hit_beats`) after.  This IS the general per-bank
+        LRU outcome, not an approximation: program keys are unique per
+        (stage, pair) and each pair's C2s issue contiguously on its
+        u-bank, so any cache with >= 1 entry misses exactly the first
+        atom.  Each bank's exchange cache starts cold (the local pass's
+        residency trace is computed independently at the plan layer) —
+        a conservative simplification that can only overcharge.
         """
         cfg = self.cfg
         Na, R = cfg.atom_words, cfg.row_words
         slots = max(1, cfg.num_buffers // 2)
+        entries = cfg.param_cache_entries
+        full_ns = cfg.param_load_cycles * cfg.dram_ns
+        hit_ns = param_hit_beats(cfg) * cfg.dram_ns
         x_start: float | None = None
         for stage in self.exchange_stages():
             for p in stage.pairs:
@@ -394,10 +432,13 @@ class ShardedNttPlan:
                     t = self._open(dev, p.u, row, t0)
                     self._issue(dev, p.u, ColRead(row, atom, bu_loc), t)
                     base = p.u * self.m + w0
-                    _, c2_done = self._issue(
-                        dev, p.u,
-                        C2((bu_loc,), (bu_recv,), (base,), p.stride,
-                           gs=not self.forward))
+                    c2 = C2((bu_loc,), (bu_recv,), (base,), p.stride,
+                            gs=not self.forward)
+                    pn, code = None, 0
+                    if entries:
+                        pn, code = (full_ns, 1) if a == 0 else (hit_ns, 2)
+                    _, c2_done = self._issue(dev, p.u, c2, param_ns=pn,
+                                             code=code)
                     _, u_wr = self._issue(dev, p.u, ColWrite(row, atom, bu_loc))
                     done_u = max(done_u, u_wr)
                     # v' bursts back and is written on v
@@ -431,9 +472,10 @@ class ShardedNttPlan:
         single_ns = single.ns if single is not None else 0.0
 
         def run_local(gates: list[float]) -> None:
+            traces = self.local_param_traces()
             for b, cmds in enumerate(self.local_streams()):
                 dev.enqueue_flat(self.flat_banks[b], cmds, gate=gates[b],
-                                 job_id=("local", b))
+                                 job_id=("local", b), param_trace=traces[b])
             for ev in dev.drain():
                 ready[ev.job_id[1]] = ev.done
 

@@ -80,6 +80,35 @@ class StatsRegistry:
     def energy_nj(self, model: EnergyModel | None = None) -> float:
         return (model or EnergyModel()).energy_nj(self.device_counts())
 
+    def param_hit_rate(self, channel: int | None = None,
+                       bank: int | None = None) -> float:
+        """Hit rate of the device-side twiddle-parameter cache
+        (`PimConfig.param_cache_entries`): hits / (hits + misses) over
+        the whole device, one channel, or one bank.  `bank` addresses a
+        bank WITHIN a channel and therefore requires `channel` on a
+        multi-channel registry (it defaults to the sole channel 0
+        otherwise).  0.0 when the cache is disabled (no tracked
+        accesses)."""
+        if bank is not None:
+            if channel is None:
+                chans = self.channels()
+                if len(chans) > 1:
+                    raise ValueError(
+                        "bank= addresses a bank within a channel; pass "
+                        f"channel= too (registry spans channels {chans})")
+                channel = chans[0] if chans else 0
+            c = self.bank_counts(channel, bank)
+        elif channel is not None:
+            c = self.channel_counts(channel)
+        else:
+            c = self.device_counts()
+        hits = c.get("param_hit", 0)
+        total = hits + c.get("param_miss", 0)
+        return hits / total if total else 0.0
+
+    #: per-bank counters that are derived metrics, not issued commands
+    NON_COMMAND_KEYS = ("bu_ops", "refresh", "param_hit", "param_miss")
+
     def summary(self, model: EnergyModel | None = None) -> dict:
         """Flat dict for reports / benchmark `emit` lines."""
         dev = self.device_counts()
@@ -88,7 +117,7 @@ class StatsRegistry:
                 "bus_utilization": self.bus_utilization(ch),
                 "commands": sum(
                     v for k, v in self.channel_counts(ch).items()
-                    if k not in ("bu_ops", "refresh")
+                    if k not in self.NON_COMMAND_KEYS
                 ),
             }
             for ch in self.channels()

@@ -159,13 +159,28 @@ def dumps_trace(streams: Streams) -> str:
     return buf.getvalue()
 
 
-def replay_trace(cfg: PimConfig, streams: Streams, policy: str = "rr") -> Device:
-    """Build a Device large enough for the trace, enqueue, and drain it."""
+def replay_trace(cfg: PimConfig, streams: Streams, policy: str = "rr",
+                 param_traces: Mapping[tuple[int, int], object] | None = None,
+                 ) -> Device:
+    """Build a Device large enough for the trace, enqueue, and drain it.
+
+    The text format records commands, not twiddle values, so a replay
+    cannot rederive the device-side parameter cache's residency (that
+    needs the GLOBAL transform size behind each stream's (w0, r_w)
+    bases).  When the recording ran with `param_cache_entries > 0`,
+    pass `param_traces` to reproduce the recorded timing exactly: the
+    per-stream `engine.param_beat_trace` results keyed like `streams`,
+    which is what `session.CompiledPlan.param_trace_streams()` returns
+    for the plan that produced the recording.  Without it the replay
+    charges the flat seed-model `param_load_cycles` per CU op (exact
+    for default configs, conservative otherwise).
+    """
     channels = max((ch for ch, _ in streams), default=0) + 1
     banks = max((b for _, b in streams), default=0) + 1
     topo = DeviceTopology(channels=channels, ranks=1, banks_per_rank=banks)
     dev = Device(cfg, topo, policy=policy)
     for (ch, bank), cmds in sorted(streams.items()):
-        dev.channels[ch].enqueue(bank, cmds)
+        trace = param_traces.get((ch, bank)) if param_traces is not None else None
+        dev.channels[ch].enqueue(bank, cmds, param_trace=trace)
     dev.drain()
     return dev

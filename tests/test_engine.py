@@ -1,0 +1,369 @@
+"""Hierarchical resource engine (`repro.pimsys.engine`): golden-cycle
+bit-identity vs the pre-refactor simulator, rank-level timing windows,
+and the device-side twiddle-parameter cache.
+
+Layers of evidence:
+  1. golden cycles: `tests/golden/engine_goldens.json` freezes the seed
+     simulator's exact latencies over single-bank, multibank, sharded,
+     and scheduler workloads; the unified engine must reproduce every
+     one bit-for-bit at the default config (param_cache_entries=0, rank
+     timing off).  Regenerate ONLY deliberately:
+     `python scripts/gen_engine_goldens.py`.
+  2. rank timing (`RankState`): tFAW caps activations per window, tRRD
+     spaces same-rank ACTs, read<->write turnaround costs time; all four
+     knobs are inert at 0 and only ever add latency.
+  3. parameter cache: entries=0 is the seed model; enabling it tracks
+     per-bank hit/miss in `StatsRegistry`, never slows any workload,
+     visibly lifts the 16-bank multibank speedup, and keeps the analytic
+     bus bound a true (trace-aware) lower bound.
+
+The hypothesis twins live in `test_engine_props.py`.
+"""
+import json
+import os
+import warnings
+
+import pytest
+
+from repro.core.mapping import RowCentricMapper
+from repro.core.pim_config import PimConfig
+from repro.core.pimsim import (
+    BankTimer,
+    analytic_multibank_bound,
+)
+from repro.pimsys import (
+    BatchOp,
+    ChannelController,
+    Device,
+    DeviceTopology,
+    NttJob,
+    NttOp,
+    PimSession,
+    PolymulJob,
+    RequestScheduler,
+    ShardedNttOp,
+    ShardedNttPlan,
+    param_beat_trace,
+)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "engine_goldens.json")
+RANK_CFG = dict(tFAW=24, tRRD=4, tRTW=8, tWTR=5)  # HBM2E-class windows
+
+
+def _goldens():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# 1. golden cycle counts: the engine IS the seed model at defaults
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rec", _goldens()["single"],
+                         ids=lambda r: f"n{r['n']}-nb{r['nb']}-f{int(r['forward'])}")
+def test_golden_single_bank_bit_identical(rec):
+    cfg = PimConfig(num_buffers=rec["nb"])
+    cmds = RowCentricMapper(cfg, rec["n"], forward=rec["forward"]).commands()
+    assert len(cmds) == rec["commands"]  # command list did not drift
+    r = BankTimer(cfg).simulate(cmds)
+    assert r.ns == rec["ns"]  # exact ns, not approx
+    assert dict(sorted(r.stats.items())) == rec["stats"]
+
+
+@pytest.mark.parametrize("rec", _goldens()["multibank"],
+                         ids=lambda r: f"n{r['n']}-nb{r['nb']}-b{r['banks']}-{r['policy']}")
+def test_golden_multibank_bit_identical(rec):
+    cfg = PimConfig(num_buffers=rec["nb"])
+    cmds = RowCentricMapper(cfg, rec["n"]).commands()
+    ctrl = ChannelController(cfg, policy=rec["policy"])
+    for i in range(rec["banks"]):
+        ctrl.enqueue(ctrl.add_bank(), cmds, job_id=i)
+    ctrl.drain()
+    assert ctrl.makespan_ns == rec["latency_ns"]
+    assert ctrl.bus_busy_ns == rec["bus_busy_ns"]
+    assert analytic_multibank_bound(rec["n"], rec["banks"], cfg) == rec["analytic_ns"]
+
+
+@pytest.mark.parametrize("rec", _goldens()["sharded"],
+                         ids=lambda r: f"n{r['n']}-b{r['banks']}-f{int(r['forward'])}")
+def test_golden_sharded_bit_identical(rec):
+    cfg = PimConfig(num_buffers=rec["nb"], num_channels=rec["channels"],
+                    num_banks=rec["banks_per_rank"])
+    r = ShardedNttPlan(cfg, rec["n"], rec["banks"],
+                       forward=rec["forward"]).simulate(baseline=False)
+    assert r.latency_ns == rec["latency_ns"]
+    assert r.local_ns == rec["local_ns"]
+    assert r.exchange_ns == rec["exchange_ns"]
+    assert (r.xfer_atoms, r.xfer_hops) == (rec["xfer_atoms"], rec["xfer_hops"])
+
+
+def test_golden_scheduler_bit_identical():
+    rec = _goldens()["scheduler"][0]
+    cfg = PimConfig(num_buffers=2, num_channels=2, num_banks=2)
+    jobs = [NttJob(512), PolymulJob(256), NttJob(1024), NttJob(512),
+            PolymulJob(512), NttJob(256)]
+    closed = RequestScheduler(cfg).run_closed_loop(jobs)
+    assert [float(x) for x in closed.done_ns] == rec["closed_done_ns"]
+    assert closed.makespan_ns == rec["closed_makespan_ns"]
+    open_ = RequestScheduler(cfg).run_open_loop(jobs, rate_per_us=0.1, seed=3)
+    assert [float(x) for x in open_.done_ns] == rec["open_done_ns"]
+    assert open_.makespan_ns == rec["open_makespan_ns"]
+
+
+# ---------------------------------------------------------------------------
+# 2. rank-level timing
+# ---------------------------------------------------------------------------
+
+
+def _multibank_device(cfg, n=1024, banks=8, record_acts=False):
+    dev = Device(cfg, DeviceTopology(channels=1, banks_per_rank=banks),
+                 record_acts=record_acts)
+    cmds = RowCentricMapper(cfg, n).commands()
+    for f in range(banks):
+        dev.enqueue_flat(f, cmds, job_id=f)
+    dev.drain()
+    return dev
+
+
+def test_rank_timing_inert_at_zero():
+    """All-zero rank fields reproduce the unconstrained seed timing even
+    when commands route through the (recording) rank path."""
+    cfg = PimConfig(num_buffers=2)
+    base = _multibank_device(cfg)
+    rec = _multibank_device(cfg, record_acts=True)
+    assert rec.makespan_ns == base.makespan_ns
+    assert len(rec.channels[0].act_starts(0)) > 0
+
+
+def test_tfaw_window_enforced():
+    """With tFAW on, any tFAW-wide slice of the ACT trace holds <= 4
+    activations per rank — and enforcing it costs latency on a rank of
+    8 contending banks."""
+    cfg = PimConfig(num_buffers=2)
+    cfg_r = cfg.with_(**RANK_CFG)
+    base = _multibank_device(cfg, record_acts=True)
+    dev = _multibank_device(cfg_r, record_acts=True)
+    acts = sorted(dev.channels[0].act_starts(0))
+    faw = cfg_r.tFAW * cfg_r.dram_ns
+    for i in range(len(acts) - 4):
+        assert acts[i + 4] >= acts[i] + faw - 1e-9
+    assert dev.makespan_ns > base.makespan_ns
+    # the unconstrained run really does violate the window (the
+    # constraint is not vacuous on this workload)
+    acts0 = sorted(base.channels[0].act_starts(0))
+    assert any(acts0[i + 4] < acts0[i] + faw for i in range(len(acts0) - 4))
+
+
+def test_trrd_spacing_enforced():
+    cfg = PimConfig(num_buffers=2).with_(tRRD=4)
+    dev = _multibank_device(cfg, banks=4, record_acts=True)
+    acts = sorted(dev.channels[0].act_starts(0))
+    trrd = cfg.tRRD * cfg.dram_ns
+    assert all(b - a >= trrd - 1e-9 for a, b in zip(acts, acts[1:]))
+
+
+def test_rank_partitioning_relieves_tfaw():
+    """Same 8 banks: 2 ranks of 4 see less tFAW pressure than 1 rank of
+    8, so the two-rank device is never slower."""
+    cfg = PimConfig(num_buffers=2).with_(**RANK_CFG)
+    cmds = RowCentricMapper(cfg, 1024).commands()
+
+    def run(ranks, banks_per_rank):
+        dev = Device(cfg, DeviceTopology(channels=1, ranks=ranks,
+                                         banks_per_rank=banks_per_rank))
+        for f in range(8):
+            dev.enqueue_flat(f, cmds, job_id=f)
+        dev.drain()
+        return dev.makespan_ns
+
+    assert run(2, 4) <= run(1, 8)
+
+
+def test_turnaround_only_adds_latency():
+    cfg = PimConfig(num_buffers=2)
+    base = _multibank_device(cfg, banks=4)
+    turn = _multibank_device(cfg.with_(tRTW=8, tWTR=5), banks=4)
+    assert turn.makespan_ns >= base.makespan_ns
+
+
+def test_rank_timing_single_bank_unchanged():
+    """One bank alone: tRAS spacing dominates every rank window, so the
+    paper-calibrated single-bank timing is untouched even with rank
+    timing enabled."""
+    cfg = PimConfig(num_buffers=2)
+    cmds = RowCentricMapper(cfg, 1024).commands()
+    ref = BankTimer(cfg).simulate(cmds)
+    ctrl = ChannelController(cfg.with_(**RANK_CFG))
+    ctrl.enqueue(ctrl.add_bank(), cmds)
+    ctrl.drain()
+    assert ctrl.makespan_ns == ref.ns
+
+
+# ---------------------------------------------------------------------------
+# 3. device-side twiddle-parameter cache
+# ---------------------------------------------------------------------------
+
+
+def test_param_trace_disabled_is_none():
+    cfg = PimConfig(num_buffers=2)
+    cmds = RowCentricMapper(cfg, 256).commands()
+    assert param_beat_trace(cfg, 256, cmds) is None
+
+
+def test_param_trace_shape_and_monotone_beats():
+    cfg = PimConfig(num_buffers=2, param_cache_entries=8)
+    cmds = RowCentricMapper(cfg, 512).commands()
+    trace = param_beat_trace(cfg, 512, cmds)
+    from repro.core.pimsim import PARAM_OPS
+
+    cu_ops = sum(1 for c in cmds if c.__class__ in PARAM_OPS)
+    assert len(trace) == cu_ops
+    full = cfg.param_load_cycles
+    assert all(b == full or (b == 1 and code == 2) for b, code in trace)
+    assert any(code == 2 for _, code in trace)  # some locality exists
+    assert trace[0][1] == 1  # first access is compulsory-miss
+
+
+def test_cache_lifts_16bank_speedup_and_counts_hits():
+    """The acceptance bar: enabling the cache must measurably improve
+    the 16-bank multibank speedup, with per-bank hit/miss counters in
+    the stats registry."""
+    n = 1024
+    sess0 = PimSession(PimConfig(num_buffers=2))
+    sessC = PimSession(PimConfig(num_buffers=2, param_cache_entries=8))
+    plan0 = sess0.compile(BatchOp(NttOp(n), 16))
+    planC = sessC.compile(BatchOp(NttOp(n), 16))
+    r0 = sess0.run(plan0)
+    rC = sessC.run(planC)
+    assert rC.timing.speedup > r0.timing.speedup * 1.05
+    assert rC.timing.latency_ns < r0.timing.latency_ns
+    assert rC.timing.param_hit_rate > 0.3
+    assert r0.timing.param_hit_rate == 0.0
+    # per-bank tracking: every bank ran the same stream -> same counters
+    for b in range(16):
+        counts = rC.stats.bank_counts(0, b)
+        assert counts["param_hit"] > 0 and counts["param_miss"] > 0
+        assert counts == rC.stats.bank_counts(0, 0)
+    assert rC.stats.param_hit_rate() == pytest.approx(
+        rC.stats.param_hit_rate(bank=0))
+    # the analytic bound is trace-aware and still a bound
+    assert rC.timing.latency_ns >= rC.timing.analytic_latency_ns - 1e-6
+    assert rC.timing.analytic_latency_ns < r0.timing.analytic_latency_ns
+
+
+def test_cache_never_slows_sharded():
+    cfg = PimConfig(num_buffers=2, num_channels=2, num_banks=4)
+    r0 = ShardedNttPlan(cfg, 2048, 8).simulate(baseline=False)
+    rC = ShardedNttPlan(cfg.with_(param_cache_entries=8), 2048, 8).simulate(
+        baseline=False)
+    assert rC.latency_ns <= r0.latency_ns
+    # the exchange shares one twiddle per pair: high hit rate there
+    assert rC.stats.device_counts()["param_hit"] > 0
+    assert rC.latency_ns >= ShardedNttPlan(
+        cfg.with_(param_cache_entries=8), 2048, 8).analytic_local_bound() - 1e-6
+
+
+def test_cache_single_bank_faster_and_consistent():
+    cfg = PimConfig(num_buffers=2, param_cache_entries=16)
+    sess = PimSession(cfg)
+    plan = sess.compile(NttOp(1024))
+    t = sess.run(plan).timing
+    base = BankTimer(PimConfig(num_buffers=2)).simulate(plan.commands)
+    assert t.ns < base.ns
+    assert t.stats["param_hit"] + t.stats["param_miss"] == (
+        t.stats["c1"] + t.stats["c2"])
+
+
+def test_cache_zero_regeneration_on_repeat_runs():
+    """Plan-level residency traces are frozen: a second run touches
+    neither the mapper nor the trace builder."""
+    from repro.core import mapping
+
+    sess = PimSession(PimConfig(num_buffers=2, param_cache_entries=8))
+    plan = sess.compile(BatchOp(NttOp(512), 4))
+    sess.run(plan)
+    gen0 = mapping.mapper_generations()
+    t0 = plan.param_trace
+    sess.run(plan)
+    assert mapping.mapper_generations() == gen0
+    assert plan.param_trace is t0  # same frozen object, no rebuild
+
+
+def test_cache_through_scheduler_submit():
+    cfg = PimConfig(num_buffers=2, num_banks=2, param_cache_entries=8)
+    sess = PimSession(cfg)
+    res = sess.submit(sess.compile(NttOp(512)), count=6)
+    dev = res.stats.device_counts()
+    assert dev["param_hit"] > 0
+    sess0 = PimSession(PimConfig(num_buffers=2, num_banks=2))
+    res0 = sess0.submit(sess0.compile(NttOp(512)), count=6)
+    assert res.timing.makespan_ns <= res0.timing.makespan_ns
+
+
+def test_legacy_shims_cache_aware():
+    """The deprecated entry points ride the session path, so the cache
+    reaches them too — same cycles as the session for the same cfg."""
+    from repro.core.pimsim import simulate_multibank
+
+    cfg = PimConfig(num_buffers=2, param_cache_entries=8)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = simulate_multibank(1024, 8, cfg)
+    sess = PimSession(cfg)
+    direct = sess.run(sess.compile(BatchOp(NttOp(1024), 8))).timing
+    assert legacy.latency_ns == direct.latency_ns
+    assert legacy.param_hit_rate == direct.param_hit_rate
+
+
+def test_trace_replay_with_param_traces_matches_live():
+    """A recorded cache-enabled workload replays bit-exactly when the
+    per-stream residency traces ride along; without them the replay
+    charges the flat model — conservative, never faster."""
+    from repro.pimsys import dumps_trace, loads_trace, replay_trace
+
+    cfg = PimConfig(num_buffers=2, param_cache_entries=8)
+    cmds = RowCentricMapper(cfg, 512).commands()
+    trace = param_beat_trace(cfg, 512, cmds)
+    live = ChannelController(cfg)
+    for _ in range(2):
+        live.enqueue(live.add_bank(), cmds, param_trace=trace)
+    live.drain()
+    streams = loads_trace(dumps_trace({(0, 0): cmds, (0, 1): cmds}))
+    dev = replay_trace(cfg, streams,
+                       param_traces={(0, 0): trace, (0, 1): trace})
+    assert dev.makespan_ns == live.makespan_ns
+    assert replay_trace(cfg, streams).makespan_ns >= dev.makespan_ns
+    # the plan surfaces the same mapping, keyed like its trace_streams
+    sess = PimSession(cfg)
+    plan = sess.compile(BatchOp(NttOp(512), 2))
+    r = sess.run(plan)
+    pts = plan.param_trace_streams()
+    assert set(pts) == set(plan.trace_streams())
+    dev2 = replay_trace(cfg, loads_trace(r.trace.dumps()), param_traces=pts)
+    assert dev2.makespan_ns == r.timing.latency_ns
+
+
+def test_param_trace_length_mismatch_raises():
+    cfg = PimConfig(num_buffers=2, param_cache_entries=4)
+    cmds = RowCentricMapper(cfg, 256).commands()
+    trace = param_beat_trace(cfg, 256, cmds)
+    ctrl = ChannelController(cfg)
+    with pytest.raises(ValueError, match="shorter"):
+        ctrl.enqueue(ctrl.add_bank(), cmds, param_trace=trace[:-1])
+    ctrl = ChannelController(cfg)
+    with pytest.raises(ValueError, match="longer"):
+        ctrl.enqueue(ctrl.add_bank(), cmds, param_trace=trace + trace[-1:])
+    with pytest.raises(ValueError, match="longer"):
+        BankTimer(cfg).simulate(cmds, trace + trace[-1:])
+
+
+def test_sharded_op_with_rank_timing_and_cache():
+    """Both features composed through the session API: still beats one
+    bank, still above the (cache-aware) analytic local bound."""
+    cfg = PimConfig(num_buffers=2, num_channels=2, num_banks=4,
+                    param_cache_entries=8, **RANK_CFG)
+    sess = PimSession(cfg)
+    r = sess.run(sess.compile(ShardedNttOp(4096, 8))).timing
+    assert r.speedup > 1.5
+    assert r.latency_ns >= r.analytic_local_ns - 1e-6

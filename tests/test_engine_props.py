@@ -1,0 +1,142 @@
+"""Hypothesis properties of the hierarchical resource engine.
+
+Three properties the ISSUE pins:
+  (a) `param_cache_entries=0` is bit-identical — in cycle counts AND
+      command lists — to the pre-refactor model: the default path, an
+      explicit all-miss trace, and the session path all agree, and the
+      mapper output is independent of every engine-level knob;
+  (b) enabling the cache never increases latency, at any cache size, on
+      single-bank, multibank, and sharded workloads (rr arbitration:
+      grant order is gate-driven, so per-op charges only shrink);
+  (c) with rank timing enabled, any tFAW-wide slice of a recorded ACT
+      trace contains at most 4 activations per rank.
+
+Skips as a module when hypothesis is absent (the `hypo` shim).
+"""
+from hypo import given, settings, st
+
+from repro.core.mapping import RowCentricMapper
+from repro.core.pim_config import PimConfig
+from repro.core.pimsim import PARAM_OPS, BankTimer
+from repro.pimsys import (
+    ChannelController,
+    Device,
+    DeviceTopology,
+    ShardedNttPlan,
+    param_beat_trace,
+)
+
+SIZES = [64, 128, 256, 512, 1024]
+NBS = [1, 2, 4, 6]
+
+
+# ---------------------------------------------------------------------------
+# (a) entries=0 == pre-refactor, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from(SIZES), st.sampled_from(NBS), st.booleans())
+@settings(max_examples=20)
+def test_zero_cache_bit_identical_single(n, nb, forward):
+    cfg = PimConfig(num_buffers=nb)
+    cmds = RowCentricMapper(cfg, n, forward=forward).commands()
+    # command lists are engine-agnostic: no timing knob reaches the mapper
+    cfg_knobs = cfg.with_(param_cache_entries=7, tFAW=24, tRRD=4)
+    assert RowCentricMapper(cfg_knobs, n, forward=forward).commands() == cmds
+    ref = BankTimer(cfg).simulate(cmds)
+    # an explicit all-miss trace is the same model as "no trace"
+    full = cfg.param_load_cycles
+    all_miss = tuple((full, 1) for c in cmds if c.__class__ in PARAM_OPS)
+    r = BankTimer(cfg).simulate(cmds, all_miss)
+    assert r.ns == ref.ns
+    assert r.phase_ns == ref.phase_ns
+
+
+@given(st.sampled_from(SIZES), st.sampled_from([1, 2, 4, 8]),
+       st.sampled_from(["rr", "ready"]))
+@settings(max_examples=15)
+def test_zero_cache_bit_identical_multibank(n, banks, policy):
+    cfg = PimConfig(num_buffers=2)
+    cmds = RowCentricMapper(cfg, n).commands()
+
+    def run(cfg):
+        ctrl = ChannelController(cfg, policy=policy)
+        for i in range(banks):
+            ctrl.enqueue(ctrl.add_bank(), cmds, job_id=i)
+        ctrl.drain()
+        return ctrl.makespan_ns
+
+    # entries=0 IS the default model (the field only gates the trace)
+    assert run(cfg.with_(param_cache_entries=0)) == run(cfg)
+
+
+# ---------------------------------------------------------------------------
+# (b) the cache never increases latency
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from(SIZES), st.sampled_from(NBS),
+       st.sampled_from([1, 2, 8, 64]))
+@settings(max_examples=20)
+def test_cache_never_slower_single(n, nb, entries):
+    cfg = PimConfig(num_buffers=nb)
+    cmds = RowCentricMapper(cfg, n).commands()
+    base = BankTimer(cfg).simulate(cmds).ns
+    cfg_c = cfg.with_(param_cache_entries=entries)
+    cached = BankTimer(cfg_c).simulate(
+        cmds, param_beat_trace(cfg_c, n, cmds)).ns
+    assert cached <= base + 1e-9
+
+
+@given(st.sampled_from(SIZES), st.sampled_from([2, 4, 8, 16]),
+       st.sampled_from([1, 8, 64]))
+@settings(max_examples=15)
+def test_cache_never_slower_multibank(n, banks, entries):
+    cmds = RowCentricMapper(PimConfig(num_buffers=2), n).commands()
+
+    def run(cfg):
+        ctrl = ChannelController(cfg)
+        trace = param_beat_trace(cfg, n, cmds)
+        for i in range(banks):
+            ctrl.enqueue(ctrl.add_bank(), cmds, job_id=i, param_trace=trace)
+        ctrl.drain()
+        return ctrl.makespan_ns
+
+    assert run(PimConfig(num_buffers=2, param_cache_entries=entries)) \
+        <= run(PimConfig(num_buffers=2)) + 1e-9
+
+
+@given(st.sampled_from([256, 512, 1024]), st.sampled_from([2, 4]),
+       st.sampled_from([1, 8]), st.booleans())
+@settings(max_examples=10)
+def test_cache_never_slower_sharded(n, banks, entries, forward):
+    cfg = PimConfig(num_buffers=2, num_channels=2, num_banks=2)
+    base = ShardedNttPlan(cfg, n, banks, forward=forward).simulate(
+        baseline=False).latency_ns
+    cached = ShardedNttPlan(cfg.with_(param_cache_entries=entries), n, banks,
+                            forward=forward).simulate(baseline=False).latency_ns
+    assert cached <= base + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# (c) the tFAW trace invariant
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from([256, 512, 1024]), st.sampled_from([2, 4, 8]),
+       st.sampled_from([12, 24, 40]), st.sampled_from(["rr", "ready"]))
+@settings(max_examples=12)
+def test_tfaw_window_invariant(n, banks, tfaw, policy):
+    cfg = PimConfig(num_buffers=2, tFAW=tfaw, tRRD=2)
+    dev = Device(cfg, DeviceTopology(channels=1, banks_per_rank=banks),
+                 policy=policy, record_acts=True)
+    cmds = RowCentricMapper(cfg, n).commands()
+    for f in range(banks):
+        dev.enqueue_flat(f, cmds, job_id=f)
+    dev.drain()
+    acts = sorted(dev.channels[0].act_starts(0))
+    faw_ns = tfaw * cfg.dram_ns
+    # sliding window: the 5th ACT after any ACT starts >= tFAW later,
+    # i.e. every tFAW-wide slice of the trace holds <= 4 activations
+    for i in range(len(acts) - 4):
+        assert acts[i + 4] >= acts[i] + faw_ns - 1e-9
