@@ -19,6 +19,10 @@ compiled plan per sweep, replayed across points):
      sweep at several cache sizes — entries=0 is the seed model whose
      (w0, r_w) bus beats set the multibank knee; the emitted hit rate
      and speedup columns show the knee moving
+  6. (--sched) dispatch policies over the `DeviceService` futures path:
+     the same open-loop mixed-class trace under FIFO, QoS priority
+     aging, and aging + plan-coalescing (`benchmarks/serving.py` is the
+     full rate x mix x window sweep; this is the policy column)
 
 `--all` runs every sweep; `--json PATH` additionally writes every sweep
 point as machine-readable JSON (runtime plus the parsed derived metrics:
@@ -67,7 +71,11 @@ def _channel_sweep(emit, n, total_banks, channel_counts, nb):
             continue
         sess = PimSession(PimConfig(num_buffers=nb, num_channels=ch,
                                     num_banks=total_banks // ch))
-        res = sess.submit(sess.compile(PolymulOp(n)), count=total_banks).timing
+        svc = sess.service()
+        plan = sess.compile(PolymulOp(n))
+        for _ in range(total_banks):
+            svc.submit(plan)
+        res = svc.result()
         emit(
             f"multibank/channels/N={n}/banks={total_banks}/ch={ch}",
             res.makespan_ns / 1e3,
@@ -80,10 +88,11 @@ def _channel_sweep(emit, n, total_banks, channel_counts, nb):
 def _rate_sweep(emit, n, topo, rates, jobs_per_rate):
     sess = PimSession(PimConfig(num_buffers=4, num_channels=topo.channels,
                                 num_banks=topo.banks_per_rank))
+    svc = sess.service()  # default (FIFO-parity) policy, futures underneath
     plan = sess.compile(PolymulOp(n))
     for rate in rates:
-        res = sess.submit(plan, count=jobs_per_rate,
-                          rate_per_us=rate, seed=0).timing
+        svc.submit_poisson(plan, jobs_per_rate, rate, seed=0)
+        res = svc.result()
         p = res.latency_percentiles_us()
         emit(
             f"multibank/openloop/N={n}/{topo.channels}ch x{topo.banks_per_rank}ba/rate={rate}",
@@ -91,6 +100,37 @@ def _rate_sweep(emit, n, topo, rates, jobs_per_rate):
             f"p95={p['p95']:.1f}us;p99={p['p99']:.1f}us;"
             f"tput={res.throughput_jobs_per_ms:.1f}jobs_ms;"
             f"qdelay={res.queue_delay_ns.mean() / 1e3:.1f}us",
+        )
+
+
+def _sched_sweep(emit, n, topo, rate, jobs, nb=4):
+    """Dispatch-policy sweep over the SAME open-loop mixed-class trace:
+    FIFO baseline vs QoS priority aging vs aging + plan-coalescing —
+    the `DeviceService` futures path end to end."""
+    from repro.pimsys import ServicePolicy
+
+    sess = PimSession(PimConfig(num_buffers=nb, num_channels=topo.channels,
+                                num_banks=topo.banks_per_rank))
+    plan = sess.compile(PolymulOp(n))
+    policies = [
+        ("fifo", None),
+        ("qos", ServicePolicy(weight_latency=8.0)),
+        ("batch", ServicePolicy(weight_latency=8.0, batch_window_us=10.0,
+                                max_batch=4)),
+    ]
+    for label, pol in policies:
+        svc = sess.service(pol) if pol is not None else sess.service()
+        futs = svc.submit_mixed_poisson(plan, jobs, rate, latency_frac=0.25)
+        svc.gather(futs)  # resolve the epoch through the futures path
+        res = svc.result()
+        lat = res.latency_percentiles_us(qos="latency")
+        emit(
+            f"multibank/sched/N={n}/{topo.channels}ch x{topo.banks_per_rank}ba"
+            f"/rate={rate}/{label}",
+            lat["p99"],
+            f"lat_p50={lat['p50']:.1f}us;"
+            f"tput={res.class_throughput_jobs_per_ms('throughput'):.1f}jobs_ms;"
+            f"batches={res.batches};coalesced={res.coalesced}",
         )
 
 
@@ -171,6 +211,17 @@ def run_param_cache(emit, quick: bool = False):
                        entries_list=[0, 4, 16, 64])
 
 
+def run_sched(emit, quick: bool = False):
+    if quick:
+        _sched_sweep(emit, n=512,
+                     topo=DeviceTopology(channels=2, banks_per_rank=2),
+                     rate=0.3, jobs=24)
+        return
+    _sched_sweep(emit, n=1024,
+                 topo=DeviceTopology(channels=2, banks_per_rank=4),
+                 rate=0.2, jobs=64)
+
+
 # --------------------------------------------------------------------------
 # machine-readable output (--json): the cross-PR perf trajectory artifact
 # --------------------------------------------------------------------------
@@ -220,8 +271,13 @@ def main():
     ap.add_argument("--param-cache", action="store_true",
                     help="run the device-side twiddle-parameter-cache "
                          "sweep instead of the independent-jobs sweeps")
+    ap.add_argument("--sched", action="store_true",
+                    help="run the dispatch-policy sweep (FIFO vs QoS "
+                         "aging vs plan-coalescing) over the "
+                         "DeviceService futures path")
     ap.add_argument("--all", action="store_true",
-                    help="run every sweep (base + sharded + param-cache)")
+                    help="run every sweep (base + sharded + param-cache "
+                         "+ sched)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write every sweep point as JSON "
                          "(e.g. BENCH_multibank.json)")
@@ -231,13 +287,15 @@ def main():
     sink = collecting_emit(emit, records) if args.json else emit
 
     print("name,us_per_call,derived")
-    base = args.all or not (args.sharded or args.param_cache)
+    base = args.all or not (args.sharded or args.param_cache or args.sched)
     if base:
         run(sink, quick=args.quick)
     if args.sharded or args.all:
         run_sharded(sink, quick=args.quick)
     if args.param_cache or args.all:
         run_param_cache(sink, quick=args.quick)
+    if args.sched or args.all:
+        run_sched(sink, quick=args.quick)
 
     if args.json:
         with open(args.json, "w") as f:
@@ -247,6 +305,7 @@ def main():
                     "quick": args.quick,
                     "sharded": args.sharded or args.all,
                     "param_cache": args.param_cache or args.all,
+                    "sched": args.sched or args.all,
                     "points": records,
                 },
                 f, indent=2)

@@ -1,0 +1,184 @@
+"""Serving sweep: arrival rate x QoS mix x batching window (`DeviceService`).
+
+The ROADMAP's north star is serving heavy NTT traffic; this benchmark
+drives the async device-service API across the three axes that define
+that regime, on a deliberately bus-bound device (many banks on one
+shared command bus, device-side twiddle-parameter cache sized to the
+plan's whole (w0, r_w) program working set):
+
+  load      offered arrival rate as a multiple of the device's measured
+            closed-loop capacity (0.5x = underload ... 2x+ = saturated)
+  mix       fraction of requests in the `latency` QoS class (the rest
+            are `throughput` class)
+  policy    fifo        the default FIFO-equivalent ServicePolicy —
+                        the pre-redesign baseline, bit-identical to the
+                        legacy scheduler
+            qos         weighted priority aging (latency weight 8x)
+            batch<W>    aging + plan-coalescing window of W us: same-plan
+                        throughput arrivals gang-issue with warm
+                        parameter-cache residency traces
+
+Each sweep point emits TWO gated rows: the latency-class p99 (us) and
+the throughput-class service rate expressed as us/job (1e3 / jobs-per-ms)
+— both are "lower is better" latencies, so `scripts/perf_check.py`
+gates >10% regressions on either axis against the committed
+`BENCH_serving.json`.  An admission-control point (bounded queue +
+token bucket at the highest load) reports per-class shed rates.
+
+Every arrival trace derives from fixed seeds recorded in the JSON; the
+simulator is deterministic, so the artifact is byte-stable until a real
+scheduling or timing change lands.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.serving [--quick] \
+        [--json BENCH_serving.json]
+"""
+import argparse
+import json
+
+from repro.core.pim_config import PimConfig
+from repro.pimsys import DeviceService, NttOp, PimSession, ServicePolicy
+
+SEED_TPUT, SEED_LAT = 0, 1
+N = 256
+
+
+def serving_session(banks: int) -> PimSession:
+    """One shared-bus channel of `banks` banks, parameter cache sized to
+    the whole program working set (126 programs at N=256) so coalesced
+    gang members replay warm residency traces."""
+    return PimSession(PimConfig(num_buffers=2, num_channels=1,
+                                num_banks=banks, param_cache_entries=128))
+
+
+def measured_capacity(sess: PimSession, plan) -> float:
+    """Closed-loop FIFO capacity in jobs/us (the 1x load anchor)."""
+    svc = DeviceService(sess)
+    for _ in range(4 * sess.topo.total_banks):
+        svc.submit(plan)
+    res = svc.result()
+    return res.throughput_jobs_per_ms / 1e3
+
+
+def run_point(sess, plan, policy, rate_per_us, mix, count, deadline_us):
+    svc = DeviceService(sess, policy=policy)
+    svc.submit_mixed_poisson(plan, count, rate_per_us, latency_frac=mix,
+                             deadline_us=deadline_us,
+                             seed_throughput=SEED_TPUT, seed_latency=SEED_LAT)
+    return svc.result()
+
+
+def emit_point(emit, name, res):
+    # fail CLOSED: a class that was offered traffic but completed nothing
+    # would otherwise emit p99=0.0 (reads as a huge improvement) or drop
+    # its gated row entirely — the worst regression must not pass the gate
+    for cls in ("latency", "throughput"):
+        offered = sum(1 for c in res.qos if c == cls)
+        if offered and res.class_latency_ns(cls).size == 0:
+            raise RuntimeError(
+                f"{name}: no {cls}-class request completed; refusing to "
+                "emit a fail-open sweep point")
+    lat_p = res.latency_percentiles_us(qos="latency")
+    tput = res.class_throughput_jobs_per_ms("throughput")
+    shared = (f"slo={res.deadline_attainment('latency'):.2f};"
+              f"batches={res.batches};coalesced={res.coalesced};"
+              f"hit_rate={res.stats.param_hit_rate():.2f};"
+              f"bus={res.stats.bus_utilization(0):.2f};"
+              f"rejected={res.rejected}")
+    emit(f"{name}/latency_p99", lat_p["p99"],
+         f"p50={lat_p['p50']:.1f}us;{shared}")
+    if tput > 0:
+        emit(f"{name}/tput_us_per_job", 1e3 / tput,
+             f"tput={tput:.1f}jobs_ms;{shared}")
+
+
+def run(emit, quick: bool = False):
+    # 16 banks on one bus: past the multibank knee, where the redundant
+    # per-bank (w0, r_w) parameter traffic is the binding resource and
+    # coalescing pays — the serving regime this benchmark exists for
+    banks = 16
+    count = 160 if quick else 280
+    loads = [1.0, 2.0] if quick else [0.5, 1.0, 2.0, 4.0]
+    mixes = [0.25] if quick else [0.25, 0.5]
+    windows = [10.0] if quick else [5.0, 10.0, 20.0]
+
+    sess = serving_session(banks)
+    plan = sess.compile(NttOp(N))
+    single_us = sess.baseline(N).ns / 1e3
+    capacity = measured_capacity(sess, plan)
+    deadline_us = 8 * single_us
+    emit(f"serving/N={N}/banks={banks}/capacity", 1e3 / capacity / 1e3,
+         f"capacity={capacity * 1e3:.1f}jobs_ms;single_us={single_us:.1f}")
+
+    for load in loads:
+        rate = load * capacity
+        for mix in mixes:
+            base = f"serving/N={N}/banks={banks}/load={load}x/mix={mix}"
+            fifo = run_point(sess, plan, ServicePolicy(), rate, mix,
+                             count, deadline_us)
+            emit_point(emit, f"{base}/fifo", fifo)
+            qos = run_point(sess, plan, ServicePolicy(weight_latency=8.0),
+                            rate, mix, count, deadline_us)
+            emit_point(emit, f"{base}/qos", qos)
+            for w in windows:
+                bat = run_point(
+                    sess, plan,
+                    ServicePolicy(weight_latency=8.0, batch_window_us=w,
+                                  max_batch=4),
+                    rate, mix, count, deadline_us)
+                emit_point(emit, f"{base}/batch{w:g}", bat)
+
+    # admission control at the heaviest load: bounded queue + token bucket
+    rate = loads[-1] * capacity
+    adm = run_point(
+        sess, plan,
+        ServicePolicy(weight_latency=8.0, batch_window_us=windows[0],
+                      max_batch=4, max_queue_depth=4 * banks,
+                      bucket_rate_per_us=1.2 * capacity,
+                      bucket_burst=2 * banks),
+        rate, mixes[0], count, deadline_us)
+    per_cls: dict = {}
+    for (c, _), v in adm.rejected_by.items():  # sum across reject reasons
+        per_cls[c] = per_cls.get(c, 0) + v
+    emit_point(emit, f"serving/N={N}/banks={banks}/load={loads[-1]}x/admission",
+               adm)
+    emit(f"serving/N={N}/banks={banks}/load={loads[-1]}x/admission/shed", 0.0,
+         f"rejected_latency={per_cls.get('latency', 0)};"
+         f"rejected_throughput={per_cls.get('throughput', 0)};"
+         f"admitted={adm.completed}")
+
+
+def main():
+    from benchmarks.multibank import collecting_emit
+    from benchmarks.run import emit
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for smoke tests (~seconds)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every sweep point as JSON "
+                         "(e.g. BENCH_serving.json)")
+    args = ap.parse_args()
+
+    records: list = []
+    sink = collecting_emit(emit, records) if args.json else emit
+
+    print("name,us_per_call,derived")
+    run(sink, quick=args.quick)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {
+                    "benchmark": "serving",
+                    "quick": args.quick,
+                    "seeds": {"throughput": SEED_TPUT, "latency": SEED_LAT},
+                    "points": records,
+                },
+                f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(records)} sweep points to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

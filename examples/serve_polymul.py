@@ -1,31 +1,38 @@
 """Serve batched RLWE polynomial products on a PIM device, end to end.
 
-Demonstrates the full `repro.pimsys` stack — through the session API —
-for the ROADMAP's serving question: open-loop Poisson traffic of polymul
-requests scheduled onto a channels x banks device, with a functional
-spot-check that the command stream being timed also computes the right
-polynomial product.
+Demonstrates the full `repro.pimsys` stack — through the async
+`DeviceService` API — for the ROADMAP's serving question: open-loop
+Poisson traffic of polymul requests dispatched onto a channels x banks
+device under a QoS policy, with a functional spot-check that the command
+stream being timed also computes the right polynomial product.
 
-Compile once, run many (the session execution model)::
+Compile once, submit futures, resolve in simulated time::
 
     sess = PimSession(cfg, policy="rr")
     plan = sess.compile(PolymulOp(n))      # mapper + twiddle params, ONCE
     r = sess.run(plan, a, b)               # functional + single-bank timing
-    open_loop = sess.submit(plan, count=64, rate_per_us=0.1)  # serve
-    closed = sess.submit(plan, count=64)                      # batch
-    r.trace.dump("out.trace")              # replayable command artifact
+    svc = sess.service(ServicePolicy(weight_latency=8.0,
+                                     batch_window_us=10.0))
+    futs = svc.submit_poisson(plan, count=64, rate_per_us=0.1, seed=0)
+    urgent = svc.submit(plan, qos="latency", deadline_us=200.0)
+    for fut in svc.as_completed([*futs, urgent]):
+        fut.result()                       # ServedRequest, simulated us
 
-Every downstream run/submit replays the frozen plan: zero mapper or
+Every downstream submit replays the frozen plan: zero mapper or
 twiddle-parameter regeneration (the paper's precomputed (w0, r_w)
-streams, amortized across the whole serving session).
+streams, amortized across the whole serving session).  Throughput-class
+requests with the same plan coalesce into gang issues inside the
+batching window; latency-class requests jump the queue via weighted
+priority aging and are never batched.
 
     PYTHONPATH=src python examples/serve_polymul.py \
         --n 1024 --channels 2 --banks 4 --jobs 64 --rate 0.1
 
-Prints latency percentiles (p50/p95/p99), throughput, queue delay, bus
-utilization and device energy, then a closed-loop batch for comparison,
-and writes an optional command trace (--trace out.trace) that
-`repro.pimsys.trace.replay_trace` reproduces bit-for-bit.
+Prints per-class latency percentiles (p50/p95/p99), throughput, deadline
+attainment, queue delay, bus utilization and device energy, then a
+closed-loop batch for comparison, and writes an optional command trace
+(--trace out.trace) that `repro.pimsys.trace.replay_trace` reproduces
+bit-for-bit.
 """
 import argparse
 
@@ -34,7 +41,7 @@ import numpy as np
 from repro.core import modmath as mm
 from repro.core import ntt
 from repro.core.pim_config import PimConfig
-from repro.pimsys import PimSession, PolymulOp
+from repro.pimsys import STATUS_COMPLETED, PimSession, PolymulOp, ServicePolicy
 
 
 def main():
@@ -45,6 +52,12 @@ def main():
     ap.add_argument("--nb", type=int, default=4, help="atom buffers per bank")
     ap.add_argument("--jobs", type=int, default=64, help="requests to inject")
     ap.add_argument("--rate", type=float, default=0.1, help="arrivals per us (open loop)")
+    ap.add_argument("--latency-frac", type=float, default=0.25,
+                    help="fraction of requests in the latency QoS class")
+    ap.add_argument("--deadline-us", type=float, default=None,
+                    help="SLO deadline for latency-class requests")
+    ap.add_argument("--batch-window-us", type=float, default=10.0,
+                    help="plan-coalescing window (0 disables batching)")
     ap.add_argument("--policy", choices=("rr", "ready"), default="rr")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default=None, help="write the compiled command trace here")
@@ -55,7 +68,7 @@ def main():
     sess = PimSession(cfg, policy=args.policy)
     print(f"device: {sess.topo.describe()}, Nb={args.nb}, policy={args.policy}")
 
-    # -- compile ONCE: every run below replays this frozen plan -----------
+    # -- compile ONCE: every submission below replays this frozen plan ----
     plan = sess.compile(PolymulOp(args.n))
     print(f"compiled plan: {len(plan.commands)} commands, "
           f"{len(plan.twiddle_params)} CU-op twiddle-parameter programs, "
@@ -72,17 +85,35 @@ def main():
     assert np.array_equal(single.value, ntt.polymul_negacyclic_np(a, b, ctx))
     print(f"functional check OK; single-bank polymul latency {single.timing.us:.1f} us")
 
-    # -- open-loop serving: the SAME plan, queued through the scheduler ---
-    res = sess.submit(plan, count=args.jobs,
-                      rate_per_us=args.rate, seed=args.seed).timing
-    p = res.latency_percentiles_us()
+    # -- open-loop serving: futures over the QoS-aware device service -----
+    svc = sess.service(ServicePolicy(
+        weight_latency=8.0, batch_window_us=args.batch_window_us))
+    futs = svc.submit_mixed_poisson(plan, args.jobs, args.rate,
+                                    latency_frac=args.latency_frac,
+                                    deadline_us=args.deadline_us,
+                                    seed_throughput=args.seed,
+                                    seed_latency=args.seed + 1)
+    first = next(iter(svc.as_completed(futs))).result()
+    res = svc.result()
     offered = args.rate * 1e3
     print(f"[open loop] {res.completed}/{res.submitted} jobs @ {args.rate}/us "
-          f"(offered {offered:.0f} jobs/ms)")
-    print(f"  latency  p50={p['p50']:.1f}  p95={p['p95']:.1f}  "
-          f"p99={p['p99']:.1f} us")
+          f"(offered {offered:.0f} jobs/ms), seed={res.seed}, "
+          f"{res.batches} gang issues coalescing {res.coalesced} jobs")
+    print(f"  first completion: {first.qos} job #{first.index} at "
+          f"{first.done_us:.1f} us (latency {first.latency_us:.1f} us)")
+    for cls in ("latency", "throughput"):
+        if not any(c == cls for c in res.qos):
+            continue
+        p = res.latency_percentiles_us(qos=cls)
+        slo = ("n/a" if args.deadline_us is None or cls != "latency"
+               else f"{res.deadline_attainment(cls):.0%}")
+        print(f"  {cls:10s} p50={p['p50']:.1f}  p95={p['p95']:.1f}  "
+              f"p99={p['p99']:.1f} us  "
+              f"tput={res.class_throughput_jobs_per_ms(cls):.1f} jobs/ms  "
+              f"slo={slo}")
     print(f"  throughput {res.throughput_jobs_per_ms:.1f} jobs/ms, "
-          f"mean queue delay {res.queue_delay_ns.mean() / 1e3:.1f} us")
+          f"mean queue delay "
+          f"{res.queue_delay_ns[res.status == STATUS_COMPLETED].mean() / 1e3:.1f} us")
     util = ", ".join(
         f"ch{ch}={res.stats.bus_utilization(ch):.2f}" for ch in res.stats.channels())
     print(f"  bus utilization: {util}")
@@ -90,8 +121,12 @@ def main():
     print(f"  device energy {res.stats.energy_nj() / 1e3:.1f} uJ "
           f"({per_job:.0f} nJ/job)")
 
-    # -- closed-loop batch for comparison ---------------------------------
-    res_cl = sess.submit(plan, count=args.jobs).timing
+    # -- closed-loop batch for comparison (neutral FIFO policy, so the
+    #    number is the plain batch baseline, not the QoS/batching one) --
+    svc_fifo = sess.service()
+    for _ in range(args.jobs):
+        svc_fifo.submit(plan)
+    res_cl = svc_fifo.result()
     print(f"[closed loop] batch={args.jobs}: makespan {res_cl.makespan_ns / 1e3:.1f} us, "
           f"throughput {res_cl.throughput_jobs_per_ms:.1f} jobs/ms, "
           f"p99 {res_cl.latency_percentiles_us()['p99']:.1f} us")

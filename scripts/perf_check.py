@@ -1,4 +1,4 @@
-"""Perf-regression gate over `BENCH_multibank.json` sweeps.
+"""Perf-regression gate over benchmark sweep JSONs.
 
 Compares a freshly generated sweep against the committed baseline,
 point by point (matched on the `name` column): any point whose
@@ -8,8 +8,14 @@ fail — new sweeps (e.g. a just-added `--param-cache` column) should not
 require a baseline to exist first.  The simulator is deterministic, so
 a regression here is a timing-model or scheduling change, not noise.
 
+Gated artifacts: `BENCH_multibank.json` (device sweeps, `us_per_call`
+is a latency) and `BENCH_serving.json` (serving sweeps, `us_per_call`
+is the latency-class p99 or the throughput-class us/job — both
+lower-is-better, so the same rule gates the p99 and the service rate).
+
 Usage (what `scripts/smoke.sh` runs):
     python scripts/perf_check.py NEW.json BENCH_multibank.json --tol 0.10
+    python scripts/perf_check.py NEW.json BENCH_serving.json --tol 0.10
 """
 import argparse
 import json

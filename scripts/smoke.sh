@@ -17,7 +17,8 @@ timeout "${TEST_TIMEOUT}" python -m pytest -q -m "not slow" \
     tests/test_core_ntt.py tests/test_pim_sim.py tests/test_pimsys.py \
     tests/test_engine.py tests/test_engine_props.py \
     tests/test_sharded.py tests/test_sharded_props.py \
-    tests/test_session.py tests/test_session_props.py
+    tests/test_session.py tests/test_session_props.py \
+    tests/test_service.py tests/test_service_props.py
 
 echo "== smoke: device benchmark + perf-regression gate (${BENCH_TIMEOUT}s budget) =="
 # full quick sweep (base + sharded + param-cache) to a staging file,
@@ -29,6 +30,16 @@ timeout "${BENCH_TIMEOUT}" python -m benchmarks.multibank --quick --all \
 python scripts/perf_check.py BENCH_multibank.json.new BENCH_multibank.json \
     --tol 0.10
 mv BENCH_multibank.json.new BENCH_multibank.json
+
+echo "== smoke: serving sweep + p99 perf gate (${BENCH_TIMEOUT}s budget) =="
+# rate x QoS mix x batching window over the DeviceService futures path;
+# the gate fails on >10% regression of latency-class p99 or
+# throughput-class us/job vs the committed baseline, then refreshes it
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.serving --quick \
+    --json BENCH_serving.json.new
+python scripts/perf_check.py BENCH_serving.json.new BENCH_serving.json \
+    --tol 0.10
+mv BENCH_serving.json.new BENCH_serving.json
 
 echo "== smoke: engine commands/s microbenchmark (${BENCH_TIMEOUT}s budget) =="
 # floor well below the ~2x-optimized rate but above the seed's ~100k

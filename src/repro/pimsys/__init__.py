@@ -9,23 +9,30 @@ it, fronted by ONE compile/execute API:
     plan = sess.compile(PolymulOp(1024))     # frozen: commands, placement,
                                              # twiddle-parameter streams
     r = sess.run(plan, a, b)                 # RunResult: value/timing/stats/trace
-    sess.submit(plan, count=64, rate_per_us=0.1)   # queued open-loop traffic
+    svc = sess.service(ServicePolicy(weight_latency=8.0, batch_window_us=10.0))
+    futs = svc.submit_poisson(plan, count=64, rate_per_us=0.1)  # open loop
+    [f.result() for f in svc.as_completed(futs)]   # simulated-time order
 
 `session` is the entry layer: declarative op specs (`NttOp`,
 `InverseNttOp`, `PolymulOp`, `ShardedNttOp`, `BatchOp`) compile once into
 memoized `CompiledPlan`s — the paper's precomputed (w0, r_w) parameter
 streams made explicit — and run many times, mirroring how the MC amortizes
-trace generation over replay.  Beneath it sit `topology` (channels ×
-ranks × banks), `controller` (per-channel command-bus arbitration over
-`core.pimsim.BankEngine`), `scheduler` (request queue + closed/open-loop
-injection, gang-scheduled sharded jobs), `sharded` (four-step split of
-one NTT across banks/channels), `trace` (text record/replay), and `stats`
-(device-wide counters, bus utilization, energy).
+trace generation over replay.  `service` is the serving layer:
+`DeviceService.submit(plan, qos=..., deadline_us=...) -> PimFuture` over a
+policy-driven dispatcher (QoS classes with weighted priority aging,
+bounded-queue + token-bucket admission control, window-based coalescing of
+same-plan arrivals into gang issues, per-request SLO accounting).  Beneath
+them sit `topology` (channels × ranks × banks), `controller` (per-channel
+command-bus arbitration over `core.pimsim.BankEngine`), `scheduler` (the
+dispatcher: legacy FIFO loop + `run_service`, gang-scheduled sharded
+jobs), `sharded` (four-step split of one NTT across banks/channels),
+`trace` (text record/replay), and `stats` (device-wide counters, bus
+utilization, energy, per-class service counters).
 
 The pre-session entry points (`core.pimsim.simulate_ntt`,
 `simulate_multibank`, `simulate_ntt_sharded`, `core.polymul.pim_polymul`,
-`pim_ntt_sharded`, `polymul_batch`) remain as deprecated shims over a
-session, bit-identical in values, cycles, and command lists.
+`pim_ntt_sharded`, `polymul_batch`) and now `PimSession.submit()` remain
+as deprecated shims — bit-identical in values, cycles, and command lists.
 """
 from repro.pimsys.controller import ChannelController, Completion, Device
 from repro.pimsys.engine import (
@@ -35,12 +42,23 @@ from repro.pimsys.engine import (
     param_beat_trace,
 )
 from repro.pimsys.scheduler import (
+    DEFAULT_POLICY,
+    QOS_CLASSES,
+    STATUS_COMPLETED,
+    STATUS_REJECTED,
     NttJob,
     PolymulJob,
     RequestScheduler,
     SchedulerResult,
+    ServicePolicy,
+    ServiceRequest,
     ShardedNttJob,
     job_commands,
+)
+from repro.pimsys.service import (
+    DeviceService,
+    PimFuture,
+    ServedRequest,
 )
 from repro.pimsys.session import (
     BatchOp,
@@ -71,21 +89,30 @@ __all__ = [
     "ChannelEngine",
     "CompiledPlan",
     "Completion",
+    "DEFAULT_POLICY",
     "Device",
     "DeviceEngine",
+    "DeviceService",
     "DeviceTopology",
     "ExchangePair",
     "ExchangeStage",
     "InverseNttOp",
     "NttJob",
     "NttOp",
+    "PimFuture",
     "PimSession",
     "PolymulJob",
     "PolymulOp",
+    "QOS_CLASSES",
     "RankState",
     "RequestScheduler",
     "RunResult",
+    "STATUS_COMPLETED",
+    "STATUS_REJECTED",
     "SchedulerResult",
+    "ServedRequest",
+    "ServicePolicy",
+    "ServiceRequest",
     "ShardedNttJob",
     "ShardedNttOp",
     "ShardedNttPlan",

@@ -13,7 +13,7 @@ execution model:
     plan = sess.compile(PolymulOp(1024))        # frozen, reusable artifact
     r    = sess.run(plan, a, b)                 # functional + timed
     r.value, r.timing, r.stats, r.trace         # one unified result type
-    sess.submit(plan, count=64, rate_per_us=0.1)  # queued / open-loop
+    sess.service().submit_poisson(plan, 64, 0.1)  # queued / open-loop futures
 
 Three layers:
 
@@ -36,8 +36,9 @@ Three layers:
     functional output, `TimingResult` / `ShardedTimingResult` /
     `MultiBankResult` / `SchedulerResult`, a `StatsRegistry` snapshot, and
     an optional `TraceHandle` onto the `pimsys.trace` record/replay path.
-    `submit(plan, ...)` routes the same plans through `RequestScheduler`
-    for queued closed-loop batches and open-loop Poisson traffic.
+    `service()` returns the `repro.pimsys.service.DeviceService` over
+    this session — futures, QoS classes, admission control, batching;
+    the deprecated `submit(plan, ...)` shims onto its default policy.
 
 The legacy entry points remain available as thin shims over a session —
 bit-identical in values, cycle counts, and command lists — and each emits
@@ -389,6 +390,8 @@ class PimSession:
         self._baselines: dict[tuple[int, bool], TimingResult] = {}
         self._contexts: dict[tuple[int, int], ntt_ref.NttContext] = {}
         self._sched: RequestScheduler | None = None
+        self._service = None   # lazy default-policy DeviceService (service())
+        self._shim_svc = None  # the submit()/run(BatchOp) shim's own service
 
     # -- shared caches -------------------------------------------------------
     def context(self, n: int, q: int = mm.DEFAULT_Q) -> ntt_ref.NttContext:
@@ -503,7 +506,7 @@ class PimSession:
                                  trace=_trace(plan))
             if isinstance(op.op, NttOp):
                 return self._run_multibank(plan, single)
-            return self.submit(plan)
+            return self._submit(plan)
         raise TypeError(f"cannot run {op!r}")
 
     def _require(self, inputs, k: int, what: str):
@@ -636,7 +639,7 @@ class PimSession:
         return RunResult(op=op, value=None, timing=timing, stats=stats,
                          trace=_trace(plan))
 
-    # -- submit: queued / open-loop traffic through the scheduler ------------
+    # -- submit: queued / open-loop traffic through the device service -------
     def scheduler(self) -> RequestScheduler:
         """The session's persistent `RequestScheduler` (lazy).
 
@@ -649,32 +652,71 @@ class PimSession:
                                            pipelined=self.pipelined)
         return self._sched
 
+    def service(self, policy=None):
+        """A `DeviceService` over this session — the async serving API.
+
+        With `policy=None` returns the session's persistent
+        default-policy service (FIFO-equivalent dispatch, the parity
+        anchor `submit()` shims onto); pass a `ServicePolicy` for a
+        dedicated service with QoS weights, admission control, or
+        batching."""
+        from repro.pimsys.service import DeviceService
+
+        if policy is not None:
+            return DeviceService(self, policy=policy)
+        if self._service is None:
+            self._service = DeviceService(self)
+        return self._service
+
     def submit(self, plan: CompiledPlan | Op, count: int = 1, *,
                rate_per_us: float | None = None, seed: int = 0) -> RunResult:
-        """Route `count` copies of a plan through the request scheduler.
-
-        Closed loop (all present at t=0) by default; pass `rate_per_us`
-        for open-loop Poisson arrivals.  Single-bank plans prime the
-        scheduler's command cache with the compiled stream, so queued
-        traffic reuses the plan instead of re-mapping per job.
+        """Deprecated shim: route `count` copies of a plan through the
+        default-policy `DeviceService` (closed loop by default,
+        `rate_per_us` for open-loop Poisson arrivals) — bit-identical
+        to the pre-service FIFO scheduler path.  Use
+        `session.service().submit(...)` / `submit_poisson(...)` for
+        futures, QoS classes, admission control, and batching.
         """
+        warn_legacy("PimSession.submit",
+                    "service().submit / submit_poisson for futures and QoS")
+        return self._submit(plan, count, rate_per_us=rate_per_us, seed=seed)
+
+    def _submit(self, plan: CompiledPlan | Op, count: int = 1, *,
+                rate_per_us: float | None = None, seed: int = 0,
+                qos: str = "throughput",
+                deadline_us: float | None = None) -> RunResult:
+        """Warning-free service submission (the shim's body; also the
+        internal path for `run(BatchOp(PolymulOp, k))` and the legacy
+        entry-point shims)."""
         if not isinstance(plan, CompiledPlan):
             plan = self.compile(plan)
         if plan.cfg != self.cfg:
             raise ValueError("plan was compiled for a different PimConfig")
         if isinstance(plan.op, BatchOp):
             return dataclasses.replace(
-                self.submit(plan.inner, count=count * plan.count,
-                            rate_per_us=rate_per_us, seed=seed),
+                self._submit(plan.inner, count=count * plan.count,
+                             rate_per_us=rate_per_us, seed=seed, qos=qos,
+                             deadline_us=deadline_us),
                 op=plan.op)
-        job = plan.job()
-        sched = self.scheduler()
-        if not isinstance(job, ShardedNttJob):
-            sched.prime(job, plan.commands, param_trace=plan.param_trace)
-        jobs = [job] * count
+        if count < 1:  # legacy parity: an empty batch is a valid empty run
+            res = self.scheduler().run_service([], seed=seed)
+            return RunResult(op=plan.op, value=None, timing=res,
+                             stats=res.stats, trace=None)
+        # a dedicated service: the shim must not disturb (or trip over)
+        # pending futures on the user-facing service() singleton
+        if self._shim_svc is None:
+            from repro.pimsys.service import DeviceService
+
+            self._shim_svc = DeviceService(self)
+        svc = self._shim_svc
         if rate_per_us is None:
-            res = sched.run_closed_loop(jobs)
+            for _ in range(count):
+                svc.submit(plan, qos=qos, deadline_us=deadline_us)
         else:
-            res = sched.run_open_loop(jobs, rate_per_us=rate_per_us, seed=seed)
+            svc.submit_poisson(plan, count, rate_per_us, qos=qos,
+                               deadline_us=deadline_us, seed=seed)
+        # retain=False: the shim hands the result straight back, so the
+        # internal service must not accumulate epoch history
+        res = svc.flush(retain=False)
         return RunResult(op=plan.op, value=None, timing=res, stats=res.stats,
                          trace=None)

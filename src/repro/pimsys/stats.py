@@ -28,10 +28,17 @@ class StatsRegistry:
         self._bus_busy_ns: dict[int, float] = defaultdict(float)
         self._bus_span_ns: dict[int, float] = defaultdict(float)
         self._device: dict = {}
+        self._service: dict[tuple[str, str], int] = {}
 
     # -- recording -----------------------------------------------------------
     def add_bank(self, channel: int, bank: int, counters: dict) -> None:
         merge_counts(self._bank[(channel, bank)], counters)
+
+    def add_service(self, qos: str, key: str, count: int = 1) -> None:
+        """Service-layer counters keyed by QoS class: submissions,
+        per-reason rejections (`rejected_queue_full`, `rejected_rate_limited`)
+        — the admission-control view `run_service` records."""
+        self._service[(qos, key)] = self._service.get((qos, key), 0) + count
 
     def add_bus(self, channel: int, busy_ns: float, span_ns: float) -> None:
         self._bus_busy_ns[channel] += busy_ns
@@ -64,6 +71,13 @@ class StatsRegistry:
             merge_counts(out, c)
         merge_counts(out, self._device)
         return out
+
+    def service_counts(self, qos: str | None = None) -> dict:
+        """Service-layer counters: `{key: count}` for one QoS class, or
+        `{(qos, key): count}` over every class."""
+        if qos is None:
+            return dict(self._service)
+        return {k: v for (c, k), v in self._service.items() if c == qos}
 
     def channels(self) -> list[int]:
         return sorted({ch for ch, _ in self._bank} | set(self._bus_busy_ns))
@@ -122,8 +136,13 @@ class StatsRegistry:
             }
             for ch in self.channels()
         }
-        return {
+        out = {
             "device_counts": dev,
             "energy_nj": self.energy_nj(model),
             "per_channel": per_ch,
         }
+        if self._service:
+            out["service"] = {
+                f"{qos}/{key}": v for (qos, key), v in sorted(self._service.items())
+            }
+        return out

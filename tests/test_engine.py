@@ -293,11 +293,15 @@ def test_cache_zero_regeneration_on_repeat_runs():
 def test_cache_through_scheduler_submit():
     cfg = PimConfig(num_buffers=2, num_banks=2, param_cache_entries=8)
     sess = PimSession(cfg)
-    res = sess.submit(sess.compile(NttOp(512)), count=6)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res = sess.submit(sess.compile(NttOp(512)), count=6)
     dev = res.stats.device_counts()
     assert dev["param_hit"] > 0
     sess0 = PimSession(PimConfig(num_buffers=2, num_banks=2))
-    res0 = sess0.submit(sess0.compile(NttOp(512)), count=6)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        res0 = sess0.submit(sess0.compile(NttOp(512)), count=6)
     assert res.timing.makespan_ns <= res0.timing.makespan_ns
 
 

@@ -1,0 +1,105 @@
+"""Hypothesis twin of `test_service.py` — scheduler invariants.
+
+Three properties over random traces, seeds, and policies:
+  (a) job conservation: admitted + rejected == submitted, and every
+      admitted request completes, across seeds and policies;
+  (b) the default `ServicePolicy()` is bit-identical to the
+      pre-redesign FIFO `RequestScheduler` on the same arrival trace;
+  (c) batching never changes a throughput-class request's completion
+      count (nor anyone else's): the completed population is identical
+      with and without a coalescing window.
+"""
+import numpy as np
+from hypo import given, settings, st
+
+from repro.core.pim_config import PimConfig
+from repro.pimsys import (
+    STATUS_COMPLETED,
+    STATUS_REJECTED,
+    NttJob,
+    PolymulJob,
+    RequestScheduler,
+    ServicePolicy,
+    ServiceRequest,
+)
+
+
+def small_cfg(entries=0):
+    return PimConfig(num_buffers=2, num_channels=2, num_banks=2,
+                     param_cache_entries=entries)
+
+
+@st.composite
+def traces(draw, max_count=14):
+    count = draw(st.integers(2, max_count))
+    rate = draw(st.sampled_from([0.05, 0.3, 1.0]))
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1e3 / rate, size=count))
+    reqs = []
+    for t in arrivals.tolist():
+        n = draw(st.sampled_from([256, 512]))
+        job = draw(st.sampled_from(["ntt", "polymul"]))
+        job = NttJob(n) if job == "ntt" else PolymulJob(n)
+        qos = draw(st.sampled_from(["latency", "throughput"]))
+        reqs.append(ServiceRequest(t, job, qos=qos))
+    return reqs
+
+
+policies = st.sampled_from([
+    ServicePolicy(),
+    ServicePolicy(weight_latency=8.0),
+    ServicePolicy(weight_latency=4.0, max_queue_depth=3),
+    ServicePolicy(bucket_rate_per_us=0.2, bucket_burst=2),
+    ServicePolicy(weight_latency=8.0, batch_window_us=10.0, max_batch=4),
+])
+
+
+@settings(max_examples=20)
+@given(reqs=traces(), policy=policies)
+def test_jobs_are_conserved(reqs, policy):
+    res = RequestScheduler(small_cfg()).run_service(reqs, policy=policy)
+    assert res.submitted == len(reqs)
+    assert res.completed + res.rejected == res.submitted
+    # every row is accounted for exactly once, with a valid status
+    assert res.status is not None and len(res.status) == len(reqs)
+    assert set(np.unique(res.status)) <= {STATUS_COMPLETED, STATUS_REJECTED}
+    assert (res.status == STATUS_COMPLETED).sum() == res.completed
+    # completed rows carry finite timings, rejected rows none
+    done = res.status == STATUS_COMPLETED
+    assert np.isfinite(res.done_ns[done]).all()
+    assert np.isnan(res.done_ns[~done]).all()
+
+
+@settings(max_examples=12)
+@given(reqs=traces(max_count=10))
+def test_default_policy_bit_identical_to_fifo(reqs):
+    order = sorted(reqs, key=lambda r: r.arrival_ns)
+    ref = RequestScheduler(small_cfg())._run(
+        [(r.arrival_ns, r.job) for r in order])
+    got = RequestScheduler(small_cfg()).run_service(reqs)
+    assert got.makespan_ns == ref.makespan_ns
+    assert np.array_equal(got.arrivals_ns, ref.arrivals_ns)
+    assert np.array_equal(got.dispatch_ns, ref.dispatch_ns)
+    assert np.array_equal(got.done_ns, ref.done_ns)
+    assert got.stats.device_counts() == ref.stats.device_counts()
+
+
+@settings(max_examples=12)
+@given(reqs=traces(), window=st.sampled_from([1.0, 10.0, 100.0]),
+       max_batch=st.integers(2, 6), entries=st.sampled_from([0, 128]))
+def test_batching_never_changes_completion_counts(reqs, window, max_batch,
+                                                  entries):
+    cfg = small_cfg(entries)
+    base = RequestScheduler(cfg).run_service(
+        reqs, policy=ServicePolicy(weight_latency=2.0))
+    bat = RequestScheduler(cfg).run_service(
+        reqs, policy=ServicePolicy(weight_latency=2.0,
+                                   batch_window_us=window,
+                                   max_batch=max_batch))
+    assert bat.completed == base.completed == len(reqs)
+    for cls in ("latency", "throughput"):
+        assert (bat._mask(cls).sum() == base._mask(cls).sum())
+    # latency-class requests never ride a gang
+    for row in np.flatnonzero(bat.batched):
+        assert bat.qos[row] == "throughput"

@@ -157,8 +157,8 @@ def test_parity_submit_open_loop(small_pim_cfg):
     ref = RequestScheduler(small_pim_cfg).run_open_loop(
         [PolymulJob(512)] * 12, rate_per_us=0.1, seed=7)
     sess = PimSession(small_pim_cfg)
-    got = sess.submit(sess.compile(PolymulOp(512)), count=12,
-                      rate_per_us=0.1, seed=7).timing
+    got = quiet(sess.submit, sess.compile(PolymulOp(512)), count=12,
+                rate_per_us=0.1, seed=7).timing
     assert got.makespan_ns == ref.makespan_ns
     assert np.array_equal(got.done_ns, ref.done_ns)
     assert np.array_equal(got.arrivals_ns, ref.arrivals_ns)
@@ -212,9 +212,9 @@ def test_second_run_zero_mapper_regeneration(small_pim_cfg):
 def test_second_submit_zero_mapper_regeneration(small_pim_cfg):
     sess = PimSession(small_pim_cfg)
     plan = sess.compile(PolymulOp(256))
-    sess.submit(plan, count=4)
+    quiet(sess.submit, plan, count=4)
     before = mapping.mapper_generations()
-    sess.submit(plan, count=4)
+    quiet(sess.submit, plan, count=4)
     assert mapping.mapper_generations() == before
 
 
@@ -316,7 +316,7 @@ def test_scheduler_routed_batch_has_no_static_trace(small_pim_cfg):
     assert r.trace is None
     assert r.op == plan.op
     assert sess.run(plan, time=False).trace is None
-    assert sess.submit(plan).op == plan.op
+    assert quiet(sess.submit, plan).op == plan.op
 
 
 def test_batch_time_false_skips_simulation(small_pim_cfg):
@@ -343,6 +343,8 @@ def test_batch_time_false_skips_simulation(small_pim_cfg):
     ("pim_polymul", lambda cfg, a, ctx: pim_polymul(a, a, ctx, cfg)),
     ("pim_ntt_sharded", lambda cfg, a, ctx: pim_ntt_sharded(a, ctx, cfg, banks=2)),
     ("polymul_batch", lambda cfg, a, ctx: polymul_batch(256, 2, cfg)),
+    ("PimSession.submit",
+     lambda cfg, a, ctx: PimSession(cfg).submit(PolymulOp(256), count=2)),
 ])
 def test_legacy_shim_warns_exactly_once(small_pim_cfg, name, call):
     ctx = ntt.make_context(Q, 256)
@@ -356,6 +358,9 @@ def test_legacy_shim_warns_exactly_once(small_pim_cfg, name, call):
 
 
 def test_session_api_emits_no_warnings(small_pim_cfg):
+    """The supported surface — run(), run(BatchOp), and the futures
+    service — is warning-free; only the deprecated shims (including
+    `PimSession.submit`, tested above) warn."""
     sess = PimSession(small_pim_cfg)
     ctx = ntt.make_context(Q, 256)
     with warnings.catch_warnings(record=True) as w:
@@ -363,5 +368,8 @@ def test_session_api_emits_no_warnings(small_pim_cfg):
         sess.run(sess.compile(PolymulOp(256)), rand_poly(256, 0),
                  rand_poly(256, 1), ctx=ctx)
         sess.run(sess.compile(ShardedNttOp(256, 2)))
-        sess.submit(sess.compile(PolymulOp(256)), count=2)
+        sess.run(sess.compile(BatchOp(PolymulOp(256), 2)))
+        svc = sess.service()
+        svc.submit_poisson(sess.compile(PolymulOp(256)), 2, 0.1)
+        svc.flush()
     assert [x for x in w if issubclass(x.category, DeprecationWarning)] == []
