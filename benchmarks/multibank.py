@@ -26,15 +26,22 @@ compiled plan per sweep, replayed across points):
 
 `--all` runs every sweep; `--json PATH` additionally writes every sweep
 point as machine-readable JSON (runtime plus the parsed derived metrics:
-speedup, efficiency, bus occupancy, hit rate, ...) so the perf
-trajectory is tracked across PRs; smoke.sh checks the fresh sweep
-against the committed `BENCH_multibank.json` (>10% latency regression
-fails, `scripts/perf_check.py`) and then refreshes it — the simulator is
+speedup, efficiency, bus occupancy, hit rate, ..., under a
+`schema_version` + run-metadata header) so the perf trajectory is
+tracked across PRs; smoke.sh checks the fresh sweep against the
+committed `BENCH_multibank.json` (>10% latency regression fails,
+`scripts/perf_check.py`) and then refreshes it — the simulator is
 deterministic, so a diff in that file IS a perf change.
+
+`--trace-out PATH` is a separate mode: record ONE telemetry-enabled
+16-bank N=4096 sharded run (the acceptance workload) and export its
+Chrome trace-event JSON — open it in Perfetto / `chrome://tracing`, or
+feed it to `scripts/report_telemetry.py`.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.multibank [--quick] [--sharded] \
-        [--param-cache] [--all] [--json BENCH_multibank.json]
+        [--param-cache] [--all] [--json BENCH_multibank.json] \
+        [--trace-out trace.json]
     PYTHONPATH=src python -m benchmarks.run --only multibank
 """
 import argparse
@@ -259,6 +266,33 @@ def collecting_emit(emit, records: list):
     return wrapped
 
 
+def record_trace(path: str, quick: bool = False) -> dict:
+    """The acceptance workload: ONE N=4096 NTT four-step-sharded over 16
+    banks (4 channels x 4 banks), telemetry on, exported as a Chrome
+    trace-event document.  Returns {path, events, commands, banks} for
+    the caller to print/check."""
+    from repro.pimsys import validate_chrome_trace
+
+    n, banks = (1024, 4) if quick else (4096, 16)
+    cfg = PimConfig(num_buffers=4, num_channels=4, num_banks=4,
+                    param_cache_entries=8, telemetry=True)
+    sess = PimSession(cfg)
+    r = sess.run(sess.compile(ShardedNttOp(n, banks)))
+    tel = r.telemetry
+    assert tel is not None, "telemetry=True run must carry a TelemetryHandle"
+    errors = validate_chrome_trace(tel.chrome_trace())
+    if errors:
+        raise SystemExit("trace failed schema validation: " + "; ".join(errors))
+    tel.dump(path)
+    return {
+        "path": path,
+        "events": len(tel.chrome_trace()["traceEvents"]),
+        "commands": len(tel.tracer.commands),
+        "banks": banks,
+        "n": n,
+    }
+
+
 def main():
     from benchmarks.run import emit
 
@@ -281,7 +315,18 @@ def main():
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write every sweep point as JSON "
                          "(e.g. BENCH_multibank.json)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="instead of sweeping: record one telemetry-"
+                         "enabled 16-bank N=4096 sharded run and export "
+                         "its Chrome trace-event JSON")
     args = ap.parse_args()
+
+    if args.trace_out:
+        info = record_trace(args.trace_out, quick=args.quick)
+        print(f"# wrote {info['events']} trace events "
+              f"({info['commands']} commands, N={info['n']}, "
+              f"{info['banks']} banks) to {info['path']}")
+        return
 
     records: list = []
     sink = collecting_emit(emit, records) if args.json else emit
@@ -298,10 +343,16 @@ def main():
         run_sched(sink, quick=args.quick)
 
     if args.json:
+        from benchmarks.run import SCHEMA_VERSION, bench_meta
+
         with open(args.json, "w") as f:
             json.dump(
                 {
                     "benchmark": "multibank",
+                    "schema_version": SCHEMA_VERSION,
+                    # the sweeps span many configs; the DEFAULT config's
+                    # repr fingerprints the model (fields + defaults)
+                    "meta": bench_meta(cfg=PimConfig(), seeds={"openloop": 0}),
                     "quick": args.quick,
                     "sharded": args.sharded or args.all,
                     "param_cache": args.param_cache or args.all,

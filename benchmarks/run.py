@@ -5,12 +5,40 @@ Prints ``name,us_per_call,derived`` CSV lines.  Usage:
     PYTHONPATH=src python -m benchmarks.run [--only fig7,table3]
 """
 import argparse
+import hashlib
+import subprocess
 import sys
+
+#: version of the --json sweep-artifact layout (BENCH_*.json).  Bump it
+#: when the document shape changes incompatibly; `scripts/perf_check.py`
+#: refuses to compare artifacts with different versions (documents
+#: written before the field existed read as version 1).
+SCHEMA_VERSION = 2
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.4f},{derived}")
     sys.stdout.flush()
+
+
+def bench_meta(cfg: object = None, seeds: object = None) -> dict:
+    """Run-metadata block for --json sweep artifacts: a stable hash of
+    the sweep's `PimConfig` (its frozen-dataclass repr), the arrival
+    seeds, and the source revision (best-effort `git describe`;
+    "unknown" outside a checkout) — enough to answer "what produced
+    this baseline?" from the artifact alone."""
+    try:
+        git = subprocess.run(
+            ["git", "describe", "--always", "--dirty"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        git = "unknown"
+    return {
+        "cfg_hash": hashlib.sha1(repr(cfg).encode()).hexdigest()[:12],
+        "seeds": seeds,
+        "git": git,
+    }
 
 
 BENCHES = ("table2", "fig7", "fig8", "table3", "tpu_ntt", "multibank")

@@ -29,9 +29,15 @@ Every arrival trace derives from fixed seeds recorded in the JSON; the
 simulator is deterministic, so the artifact is byte-stable until a real
 scheduling or timing change lands.
 
+`--trace-out PATH` is a separate mode: record ONE telemetry-enabled
+policy point (QoS aging + coalescing under 2x load) and export its
+Chrome trace-event JSON — request-lifecycle spans tagged by QoS class,
+feed it to `scripts/report_telemetry.py` for the per-request latency
+breakdown.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.serving [--quick] \
-        [--json BENCH_serving.json]
+        [--json BENCH_serving.json] [--trace-out trace.json]
 """
 import argparse
 import json
@@ -148,6 +154,37 @@ def run(emit, quick: bool = False):
          f"admitted={adm.completed}")
 
 
+def record_trace(path: str, quick: bool = False) -> dict:
+    """One telemetry-enabled serving point (QoS aging + coalescing at 2x
+    measured capacity, 25% latency-class) exported as a Chrome
+    trace-event document with request-lifecycle spans."""
+    from repro.pimsys import validate_chrome_trace
+
+    banks = 8 if quick else 16
+    count = 64 if quick else 160
+    sess = serving_session(banks)
+    plan = sess.compile(NttOp(N))
+    capacity = measured_capacity(sess, plan)
+    deadline_us = 8 * sess.baseline(N).ns / 1e3
+    res = run_point(
+        sess, plan,
+        ServicePolicy(weight_latency=8.0, batch_window_us=10.0, max_batch=4,
+                      telemetry=True),
+        2.0 * capacity, 0.25, count, deadline_us)
+    tel = res.telemetry
+    assert tel is not None, "telemetry=True policy must carry a TelemetryHandle"
+    errors = validate_chrome_trace(tel.chrome_trace())
+    if errors:
+        raise SystemExit("trace failed schema validation: " + "; ".join(errors))
+    tel.dump(path)
+    return {
+        "path": path,
+        "events": len(tel.chrome_trace()["traceEvents"]),
+        "requests": len({r[0] for r in tel.tracer.request_spans}),
+        "completed": res.completed,
+    }
+
+
 def main():
     from benchmarks.multibank import collecting_emit
     from benchmarks.run import emit
@@ -158,7 +195,18 @@ def main():
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write every sweep point as JSON "
                          "(e.g. BENCH_serving.json)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="instead of sweeping: record one telemetry-"
+                         "enabled serving point and export its Chrome "
+                         "trace-event JSON")
     args = ap.parse_args()
+
+    if args.trace_out:
+        info = record_trace(args.trace_out, quick=args.quick)
+        print(f"# wrote {info['events']} trace events "
+              f"({info['requests']} request lifecycles, "
+              f"{info['completed']} completed) to {info['path']}")
+        return
 
     records: list = []
     sink = collecting_emit(emit, records) if args.json else emit
@@ -167,12 +215,18 @@ def main():
     run(sink, quick=args.quick)
 
     if args.json:
+        from benchmarks.run import SCHEMA_VERSION, bench_meta
+
+        seeds = {"throughput": SEED_TPUT, "latency": SEED_LAT}
         with open(args.json, "w") as f:
             json.dump(
                 {
                     "benchmark": "serving",
+                    "schema_version": SCHEMA_VERSION,
+                    "meta": bench_meta(cfg=serving_session(16).cfg,
+                                       seeds=seeds),
                     "quick": args.quick,
-                    "seeds": {"throughput": SEED_TPUT, "latency": SEED_LAT},
+                    "seeds": seeds,
                     "points": records,
                 },
                 f, indent=2)

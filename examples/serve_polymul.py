@@ -101,16 +101,23 @@ def main():
           f"{res.batches} gang issues coalescing {res.coalesced} jobs")
     print(f"  first completion: {first.qos} job #{first.index} at "
           f"{first.done_us:.1f} us (latency {first.latency_us:.1f} us)")
-    for cls in ("latency", "throughput"):
-        if not any(c == cls for c in res.qos):
-            continue
-        p = res.latency_percentiles_us(qos=cls)
+    # the per-class report comes from ONE summary() call — with a window
+    # it also carries the tumbling-window SLO timeline per class
+    win_us = max(args.deadline_us or 0.0, 50.0)
+    summ = res.summary(window_us=win_us)
+    for cls, block in summ["per_class"].items():
         slo = ("n/a" if args.deadline_us is None or cls != "latency"
-               else f"{res.deadline_attainment(cls):.0%}")
-        print(f"  {cls:10s} p50={p['p50']:.1f}  p95={p['p95']:.1f}  "
-              f"p99={p['p99']:.1f} us  "
-              f"tput={res.class_throughput_jobs_per_ms(cls):.1f} jobs/ms  "
+               else f"{block['deadline_attainment']:.0%}")
+        print(f"  {cls:10s} p50={block['p50']:.1f}  p95={block['p95']:.1f}  "
+              f"p99={block['p99']:.1f} us  "
+              f"tput={block['throughput_jobs_per_ms']:.1f} jobs/ms  "
               f"slo={slo}")
+        if args.deadline_us is not None and block["deadline_attainment_windows"]:
+            windows = block["deadline_attainment_windows"]
+            timeline = " ".join(
+                f"{t:.0f}us:{v:.0%}" for t, v in windows[:8])
+            more = f" (+{len(windows) - 8} windows)" if len(windows) > 8 else ""
+            print(f"  {'':10s} attainment/{win_us:.0f}us: {timeline}{more}")
     print(f"  throughput {res.throughput_jobs_per_ms:.1f} jobs/ms, "
           f"mean queue delay "
           f"{res.queue_delay_ns[res.status == STATUS_COMPLETED].mean() / 1e3:.1f} us")

@@ -13,6 +13,11 @@ is a latency) and `BENCH_serving.json` (serving sweeps, `us_per_call`
 is the latency-class p99 or the throughput-class us/job — both
 lower-is-better, so the same rule gates the p99 and the service rate).
 
+Both artifacts carry a `schema_version` (`benchmarks.run.SCHEMA_VERSION`;
+documents written before the field existed read as version 1).  Mixed
+versions are refused outright — a layout change must regenerate the
+committed baseline, never be silently compared across it.
+
 Usage (what `scripts/smoke.sh` runs):
     python scripts/perf_check.py NEW.json BENCH_multibank.json --tol 0.10
     python scripts/perf_check.py NEW.json BENCH_serving.json --tol 0.10
@@ -22,10 +27,13 @@ import json
 import sys
 
 
-def load_points(path: str) -> dict:
+def load_doc(path: str) -> dict:
     with open(path) as f:
-        data = json.load(f)
-    return {p["name"]: p for p in data.get("points", [])}
+        return json.load(f)
+
+
+def load_points(path: str) -> dict:
+    return {p["name"]: p for p in load_doc(path).get("points", [])}
 
 
 def main() -> int:
@@ -36,7 +44,18 @@ def main() -> int:
                     help="allowed fractional latency regression (default 0.10)")
     args = ap.parse_args()
 
-    new, base = load_points(args.new), load_points(args.baseline)
+    new_doc, base_doc = load_doc(args.new), load_doc(args.baseline)
+    v_new = new_doc.get("schema_version", 1)
+    v_base = base_doc.get("schema_version", 1)
+    if v_new != v_base:
+        print(f"perf_check: SCHEMA MISMATCH — {args.new} is version {v_new}, "
+              f"{args.baseline} is version {v_base}; regenerate the baseline "
+              "at the current schema instead of comparing across layouts",
+              file=sys.stderr)
+        return 2
+
+    new = {p["name"]: p for p in new_doc.get("points", [])}
+    base = {p["name"]: p for p in base_doc.get("points", [])}
     shared = sorted(set(new) & set(base))
     only_new = sorted(set(new) - set(base))
     only_base = sorted(set(base) - set(new))

@@ -1,0 +1,158 @@
+"""Text report over an exported telemetry trace (Chrome trace-event JSON).
+
+Reads a trace written by `TelemetryHandle.dump()` (or the benchmark
+`--trace-out` modes) and prints:
+
+  1. per-request critical-path breakdown: for every request lifecycle in
+     the trace, its named spans (queue_wait / coalesce_wait / execute),
+     the total latency, and the fraction of that latency attributed to
+     named spans — requests sorted by total latency, worst first
+  2. top-stall attribution: device command events aggregated by command
+     class, with the issue-time split into bus_wait (arbitration: bus
+     grant minus rank gate), stall (rank/buffer hazards: start minus
+     grant), param (parameter-load beats) and array (in-bank execution,
+     the event duration), sorted by total stall
+  3. summary line: request count, mean/min attribution
+
+`--min-attributed F` (default 0) turns the report into a gate: exit
+nonzero if any request attributes less than F of its latency to named
+spans.  The acceptance bar for the telemetry layer is 0.95.
+
+Works on both dialects: request-lifecycle traces (serving) have section
+1; device-only traces (session runs) have section 2 only.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.serving --trace-out trace.json
+    python scripts/report_telemetry.py trace.json --min-attributed 0.95
+"""
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+# mirrors repro.pimsys.telemetry — the report must stay standalone
+# (readable against a trace file with no repo import), so the track
+# constants are restated here
+PHASE_PID = 900000
+REQUEST_PID = 900001
+
+
+def load_events(path: str) -> list:
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, list):  # bare trace-event array dialect
+        return doc
+    return doc.get("traceEvents", [])
+
+
+def request_rows(events: list) -> list:
+    """Reassemble async b/e lifecycle pairs into per-request rows."""
+    open_spans: dict = {}
+    reqs: dict = defaultdict(lambda: {"spans": {}, "qos": "", "events": []})
+    for ev in events:
+        if ev.get("pid") != REQUEST_PID:
+            continue
+        rid = ev.get("id")
+        ph = ev.get("ph")
+        if ph == "b":
+            open_spans[(rid, ev["name"])] = ev["ts"]
+            reqs[rid]["qos"] = ev.get("args", {}).get("qos", reqs[rid]["qos"])
+        elif ph == "e":
+            t0 = open_spans.pop((rid, ev["name"]), None)
+            if t0 is not None:
+                reqs[rid]["spans"][ev["name"]] = (t0, ev["ts"])
+        elif ph == "i":
+            reqs[rid]["events"].append(ev["name"])
+    rows = []
+    for rid, r in sorted(reqs.items()):
+        if not r["spans"]:
+            continue  # rejected requests have only instant events
+        t0 = min(a for a, _ in r["spans"].values())
+        t1 = max(b for _, b in r["spans"].values())
+        total = t1 - t0
+        named = sum(b - a for a, b in r["spans"].values())
+        rows.append({
+            "rid": rid,
+            "qos": r["qos"],
+            "spans": {k: b - a for k, (a, b) in sorted(r["spans"].items())},
+            "total_us": total,
+            "attributed": (named / total) if total > 0 else 1.0,
+        })
+    rows.sort(key=lambda r: -r["total_us"])
+    return rows
+
+
+def command_stalls(events: list) -> list:
+    """Aggregate X command events by class into issue-time buckets
+    (all values in us, matching the trace's ts/dur unit)."""
+    agg: dict = defaultdict(lambda: [0, 0.0, 0.0, 0.0, 0.0])  # n,bus,stall,param,array
+    for ev in events:
+        if ev.get("ph") != "X" or ev.get("pid") in (PHASE_PID, REQUEST_PID):
+            continue
+        a = ev.get("args", {})
+        if "bus_wait_us" not in a:
+            continue  # bursts and other non-command X events
+        row = agg[ev["name"]]
+        row[0] += 1
+        row[1] += a["bus_wait_us"]
+        row[2] += a.get("stall_us", 0.0)
+        row[3] += a.get("param_us", 0.0)
+        row[4] += ev.get("dur", 0.0)
+    out = [{"cmd": k, "count": v[0], "bus_wait_us": v[1], "stall_us": v[2],
+            "param_us": v[3], "array_us": v[4]} for k, v in agg.items()]
+    out.sort(key=lambda r: -(r["bus_wait_us"] + r["stall_us"]))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON from --trace-out")
+    ap.add_argument("--min-attributed", type=float, default=0.0, metavar="F",
+                    help="fail if any request attributes < F of its latency "
+                         "to named spans (acceptance bar: 0.95)")
+    ap.add_argument("--top", type=int, default=10,
+                    help="rows to print per section (default 10)")
+    args = ap.parse_args()
+
+    events = load_events(args.trace)
+    print(f"telemetry report: {args.trace} ({len(events)} events)")
+
+    rows = request_rows(events)
+    if rows:
+        print(f"\nper-request critical path ({len(rows)} requests, "
+              f"worst {min(args.top, len(rows))} shown):")
+        print(f"  {'rid':>5} {'qos':>10} {'total_us':>9} {'attr':>6}  spans")
+        for r in rows[: args.top]:
+            spans = " + ".join(f"{k}={v:.1f}us" for k, v in r["spans"].items())
+            print(f"  {r['rid']:>5} {r['qos']:>10} {r['total_us']:>9.1f} "
+                  f"{r['attributed']:>6.1%}  {spans}")
+
+    stalls = command_stalls(events)
+    if stalls:
+        print(f"\ntop stall attribution ({len(stalls)} command classes):")
+        print(f"  {'cmd':>10} {'count':>7} {'bus_wait_us':>11} {'stall_us':>9} "
+              f"{'param_us':>9} {'array_us':>9}")
+        for r in stalls[: args.top]:
+            print(f"  {r['cmd']:>10} {r['count']:>7} "
+                  f"{r['bus_wait_us']:>11.1f} {r['stall_us']:>9.1f} "
+                  f"{r['param_us']:>9.1f} {r['array_us']:>9.1f}")
+
+    if rows:
+        worst = min(r["attributed"] for r in rows)
+        mean = sum(r["attributed"] for r in rows) / len(rows)
+        print(f"\nattribution: mean {mean:.1%}, worst {worst:.1%} "
+              f"over {len(rows)} requests")
+        if worst < args.min_attributed:
+            print(f"report_telemetry: FAIL — worst attribution {worst:.1%} "
+                  f"< required {args.min_attributed:.1%}", file=sys.stderr)
+            return 1
+    elif args.min_attributed > 0:
+        print("report_telemetry: FAIL — no request lifecycles in trace but "
+              "--min-attributed was given", file=sys.stderr)
+        return 1
+    print("report_telemetry: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,9 +43,27 @@ mv BENCH_serving.json.new BENCH_serving.json
 
 echo "== smoke: engine commands/s microbenchmark (${BENCH_TIMEOUT}s budget) =="
 # floor well below the ~2x-optimized rate but above the seed's ~100k
-# cmd/s, so a hot-loop regression fails loudly even on a noisy runner
+# cmd/s, so a hot-loop regression fails loudly even on a noisy runner.
+# telemetry defaults OFF here — the floor doubles as the zero-overhead-
+# when-off gate for the telemetry layer (within ~2% of the committed
+# 120k floor by construction of the single is-None guard per command)
 timeout "${BENCH_TIMEOUT}" python -m benchmarks.engine_speed --repeat 2 \
     --min-rate 120000
+
+echo "== smoke: telemetry traces (record, validate, report; ${BENCH_TIMEOUT}s budget) =="
+# record the acceptance workload (16-bank N=4096 sharded) + one serving
+# policy point with telemetry on, schema-validate both Chrome traces,
+# and gate the per-request latency attribution at >= 95%
+mkdir -p artifacts
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.multibank \
+    --trace-out artifacts/trace_multibank.json
+python scripts/validate_trace.py artifacts/trace_multibank.json
+python scripts/report_telemetry.py artifacts/trace_multibank.json
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.serving --quick \
+    --trace-out artifacts/trace_serving.json
+python scripts/validate_trace.py artifacts/trace_serving.json
+python scripts/report_telemetry.py artifacts/trace_serving.json \
+    --min-attributed 0.95
 
 echo "== smoke: serve_polymul example over the session API (${BENCH_TIMEOUT}s budget) =="
 timeout "${BENCH_TIMEOUT}" python examples/serve_polymul.py \

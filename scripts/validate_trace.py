@@ -1,0 +1,36 @@
+"""CLI wrapper over `repro.pimsys.telemetry.validate_chrome_trace`.
+
+Structurally validates an exported Chrome trace-event JSON document
+(event phases, required fields, track ids) and exits nonzero on any
+violation — the smoke leg runs it on the benchmark `--trace-out`
+artifacts before handing them to `report_telemetry.py`.
+
+Usage:
+    PYTHONPATH=src python scripts/validate_trace.py trace.json
+"""
+import argparse
+import json
+import sys
+
+from repro.pimsys import validate_chrome_trace
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON to validate")
+    args = ap.parse_args()
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+    errors = validate_chrome_trace(doc)
+    n = len(doc.get("traceEvents", [])) if isinstance(doc, dict) else 0
+    for e in errors:
+        print(f"validate_trace: {args.trace}: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print(f"validate_trace: OK ({n} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

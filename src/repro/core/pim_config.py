@@ -82,6 +82,16 @@ class PimConfig:
     xfer_beats_per_atom: int = 4
     channel_hop_cycles: int = 12
 
+    # -- observability (repro.pimsys.telemetry) -----------------------------
+    # Opt-in command/phase tracing.  Off by default: engines then carry
+    # `tracer=None` and the issue loops pay a single `is None` test, so
+    # the committed `engine_speed` floor is unaffected.  On, session
+    # runs attach a `TelemetryHandle` to `RunResult.telemetry` with the
+    # full per-command/per-phase timeline (Perfetto-exportable).  A bool
+    # keeps the config hashable (it stays a valid plan-cache key); the
+    # flag does not alter timing, only recording.
+    telemetry: bool = False
+
     @property
     def atom_words(self) -> int:  # Na
         return self.atom_bytes // self.word_bytes

@@ -482,7 +482,13 @@ class BankTimer:
 
     def simulate(self, commands: Iterable[Command],
                  param_trace: Sequence[tuple[int, int]] | None = None,
-                 ) -> TimingResult:
+                 tracer=None) -> TimingResult:
+        """Time one command stream.  `tracer` (a
+        `repro.pimsys.telemetry.Tracer`, duck-typed so core stays free
+        of pimsys imports) records per-command issue events on the
+        (0, 0) track and each Mark-delimited phase as a span; `None`
+        (default) records nothing and adds no per-command work beyond
+        one `is not None` test."""
         eng = BankEngine(self.cfg, pipelined=self.pipelined)
         issue = eng.issue
         t_bus = eng.t_bus
@@ -494,16 +500,24 @@ class BankTimer:
         phase_ns: dict = {}
         phase_name = "intra"
         phase_start = 0.0
+        if tracer is not None:
+            tracer.meta.setdefault("dram_ns", dram_ns)
+            trace_cmds = tracer.commands
+        else:
+            trace_cmds = None
 
         for cmd in commands:
             cls = cmd.__class__
             if cls is Mark:
                 phase_ns[phase_name] = phase_ns.get(phase_name, 0.0) + (eng.end_t - phase_start)
+                if tracer is not None:
+                    tracer.phases.append(("bank", phase_name, phase_start, eng.end_t))
                 phase_name, phase_start = cmd.name, eng.end_t
                 continue
             if cls in PARAM_OPS:
                 if it is None:
                     pn = t_param
+                    code = 0
                 else:
                     try:
                         beats, code = next(it)
@@ -515,12 +529,19 @@ class BankTimer:
                     stats["param_hit" if code == 2 else "param_miss"] += 1
             else:
                 pn = 0.0
-            s, _ = issue(cmd, bus_t, pn)
+                code = 0
+            s, done = issue(cmd, bus_t, pn)
+            if trace_cmds is not None:
+                # single bank, private bus: gate == grant == bus cursor
+                trace_cmds.append((0, 0, cls.__name__, bus_t, bus_t, s, done,
+                                   pn, code))
             bus_t = s + t_bus
 
         if it is not None and next(it, None) is not None:
             raise ValueError("param_trace longer than the stream's CU ops")
         phase_ns[phase_name] = phase_ns.get(phase_name, 0.0) + (eng.end_t - phase_start)
+        if tracer is not None and eng.end_t > phase_start:
+            tracer.phases.append(("bank", phase_name, phase_start, eng.end_t))
         return TimingResult(ns=eng.end_t, stats=dict(eng.stats), phase_ns=phase_ns)
 
 

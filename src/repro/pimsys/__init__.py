@@ -26,8 +26,12 @@ them sit `topology` (channels × ranks × banks), `controller` (per-channel
 command-bus arbitration over `core.pimsim.BankEngine`), `scheduler` (the
 dispatcher: legacy FIFO loop + `run_service`, gang-scheduled sharded
 jobs), `sharded` (four-step split of one NTT across banks/channels),
-`trace` (text record/replay), and `stats` (device-wide counters, bus
-utilization, energy, per-class service counters).
+`trace` (text record/replay), `stats` (device-wide counters, bus
+utilization, energy, per-class service counters), and `telemetry`
+(opt-in command/phase/request tracing via `PimConfig.telemetry` or
+`ServicePolicy.telemetry`: Perfetto-exportable `TelemetryHandle` on
+`RunResult`/`SchedulerResult`, tumbling-window series in
+`StatsRegistry.summary()`).
 
 The pre-session entry points (`core.pimsim.simulate_ntt`,
 `simulate_multibank`, `simulate_ntt_sharded`, `core.polymul.pim_polymul`,
@@ -79,6 +83,13 @@ from repro.pimsys.sharded import (
     ShardedTimingResult,
 )
 from repro.pimsys.stats import StatsRegistry
+from repro.pimsys.telemetry import (
+    Reservoir,
+    TelemetryHandle,
+    Tracer,
+    WindowedSeries,
+    validate_chrome_trace,
+)
 from repro.pimsys.topology import BankAddress, DeviceTopology
 from repro.pimsys.trace import dump_trace, dumps_trace, load_trace, loads_trace, replay_trace
 
@@ -106,6 +117,7 @@ __all__ = [
     "QOS_CLASSES",
     "RankState",
     "RequestScheduler",
+    "Reservoir",
     "RunResult",
     "STATUS_COMPLETED",
     "STATUS_REJECTED",
@@ -118,7 +130,10 @@ __all__ = [
     "ShardedNttPlan",
     "ShardedTimingResult",
     "StatsRegistry",
+    "TelemetryHandle",
     "TraceHandle",
+    "Tracer",
+    "WindowedSeries",
     "dump_trace",
     "dumps_trace",
     "job_commands",
@@ -127,4 +142,5 @@ __all__ = [
     "param_beat_trace",
     "replay_trace",
     "twiddle_param_stream",
+    "validate_chrome_trace",
 ]

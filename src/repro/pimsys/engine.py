@@ -300,15 +300,19 @@ class ChannelEngine:
     __slots__ = ("cfg", "channel_id", "policy", "bus_free", "bus_busy_ns",
                  "engines", "queues", "ranks", "_rank_of", "_jobs", "_rr",
                  "issued", "_banks_per_rank", "_rank_on", "_record_acts",
-                 "_t_bus", "_t_param", "_dram_ns")
+                 "_t_bus", "_t_param", "_dram_ns", "tracer")
 
     def __init__(self, cfg: PimConfig, channel_id: int = 0, policy: str = "rr",
-                 banks_per_rank: int | None = None, record_acts: bool = False):
+                 banks_per_rank: int | None = None, record_acts: bool = False,
+                 tracer=None):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
         self.cfg = cfg
         self.channel_id = channel_id
         self.policy = policy
+        # telemetry sink (telemetry.Tracer) or None; the issue paths pay
+        # exactly one `is not None` test per command when disabled
+        self.tracer = tracer
         self.bus_free = 0.0
         self.bus_busy_ns = 0.0
         self.engines: list[BankEngine] = []
@@ -405,7 +409,7 @@ class ChannelEngine:
         eng = self.engines[bank]
         if param_ns is None:
             param_ns = self._t_param if cmd.__class__ in PARAM_OPS else 0.0
-        lb = not_before if not_before > self.bus_free else self.bus_free
+        lb = grant = not_before if not_before > self.bus_free else self.bus_free
         rank = None
         kind = _RK_NONE
         if self._rank_on:
@@ -424,6 +428,10 @@ class ChannelEngine:
         self.bus_free = s + self._t_bus
         self.bus_busy_ns += param_ns + self._t_bus
         self.issued += 1
+        tr = self.tracer
+        if tr is not None:
+            tr.commands.append((self.channel_id, bank, cmd.__class__.__name__,
+                                not_before, grant, s, done, param_ns, code))
         return s, done
 
     # -- arbitration ---------------------------------------------------------
@@ -513,7 +521,7 @@ class ChannelEngine:
             grant = self.bus_free
         if grant >= horizon:
             return None
-        cmd, _, job_id, param_ns, code = self.queues[bank].popleft()
+        cmd, gate, job_id, param_ns, code = self.queues[bank].popleft()
         eng = self.engines[bank]
         lb = grant
         rank = None
@@ -535,6 +543,10 @@ class ChannelEngine:
         self.bus_busy_ns += param_ns + self._t_bus
         self._rr = bank
         self.issued += 1
+        tr = self.tracer
+        if tr is not None:
+            tr.commands.append((self.channel_id, bank, cmd.__class__.__name__,
+                                gate, grant, s, done, param_ns, code))
 
         if job_id is None:
             return _EMPTY
@@ -593,17 +605,20 @@ class DeviceEngine:
     earliest grantable command to keep event order causal.
     """
 
-    __slots__ = ("cfg", "topo", "channels")
+    __slots__ = ("cfg", "topo", "channels", "tracer")
 
     def __init__(self, cfg: PimConfig, topo: DeviceTopology | None = None,
                  policy: str = "rr", pipelined: bool = True,
-                 record_acts: bool = False):
+                 record_acts: bool = False, tracer=None):
         self.cfg = cfg
         self.topo = topo or DeviceTopology.from_config(cfg)
+        self.tracer = tracer
+        if tracer is not None:
+            tracer.meta.setdefault("dram_ns", cfg.dram_ns)
         self.channels = [
             ChannelEngine(cfg, channel_id=ch, policy=policy,
                           banks_per_rank=self.topo.banks_per_rank,
-                          record_acts=record_acts)
+                          record_acts=record_acts, tracer=tracer)
             for ch in range(self.topo.channels)
         ]
         for ctrl in self.channels:
@@ -627,13 +642,20 @@ class DeviceEngine:
         cfg = self.cfg
         hold = cfg.xfer_beats_per_atom * cfg.dram_ns
         cs = self.channels[ch_src]
+        tr = self.tracer
         if ch_src == ch_dst:
-            return cs.occupy_bus(earliest, hold) + hold
+            s = cs.occupy_bus(earliest, hold)
+            if tr is not None:
+                tr.bursts.append((ch_src, ch_dst, s, s + hold))
+            return s + hold
         cd = self.channels[ch_dst]
         s = max(earliest, cs.bus_free, cd.bus_free)
         cs.occupy_bus(s, hold)
         cd.occupy_bus(s, hold)
-        return s + hold + cfg.channel_hop_cycles * cfg.dram_ns
+        end = s + hold + cfg.channel_hop_cycles * cfg.dram_ns
+        if tr is not None:
+            tr.bursts.append((ch_src, ch_dst, s, end))
+        return end
 
     def advance(self, horizon: float = _INF) -> Sequence[Completion] | None:
         best, best_g = None, _INF
@@ -656,7 +678,7 @@ class DeviceEngine:
         return max(c.makespan_ns for c in self.channels)
 
     def stats(self) -> StatsRegistry:
-        reg = StatsRegistry()
+        reg = StatsRegistry(channels=len(self.channels))
         for ctrl in self.channels:
             ctrl.record_stats(reg)
         return reg

@@ -71,6 +71,7 @@ from repro.core.pim_config import PimConfig
 from repro.core.polymul import polymul_commands
 from repro.pimsys.controller import Device
 from repro.pimsys.stats import StatsRegistry
+from repro.pimsys.telemetry import TelemetryHandle, Tracer, WindowedSeries, device_series
 from repro.pimsys.topology import DeviceTopology
 
 
@@ -185,6 +186,14 @@ class ServicePolicy:
         Plan-coalescing window: throughput-class single-bank requests
         with the same job spec gang-issue together (see module
         docstring).  0.0 disables batching.
+    telemetry / telemetry_window_us
+        Record the run's timeline (`repro.pimsys.telemetry`): per-command
+        device events, per-request lifecycle spans, admission-reject
+        instants, and tumbling-window series (queue depth per class,
+        rejects, bus/bank occupancy) at `telemetry_window_us` windows.
+        The result then carries a `TelemetryHandle` and the stats
+        registry a `timeseries` summary block.  Off by default — the
+        dispatch loop and the device pay nothing.
     """
 
     weight_latency: float = 1.0
@@ -194,6 +203,8 @@ class ServicePolicy:
     bucket_burst: int = 1
     batch_window_us: float = 0.0
     max_batch: int = 8
+    telemetry: bool = False
+    telemetry_window_us: float = 50.0
 
     def __post_init__(self):
         if self.weight_latency <= 0 or self.weight_throughput <= 0:
@@ -208,6 +219,8 @@ class ServicePolicy:
             raise ValueError("batch_window_us must be >= 0")
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if self.telemetry_window_us <= 0:
+            raise ValueError("telemetry_window_us must be positive")
 
     def weight(self, qos: str) -> float:
         return self.weight_latency if qos == "latency" else self.weight_throughput
@@ -324,6 +337,7 @@ class SchedulerResult:
     batches: int = 0
     coalesced: int = 0
     seed: int | list | None = None
+    telemetry: TelemetryHandle | None = None
 
     @property
     def latency_ns(self) -> np.ndarray:
@@ -377,12 +391,36 @@ class SchedulerResult:
             return 0.0
         return self.completed / (self.makespan_ns / 1e6)
 
+    def windowed_deadline_attainment(
+            self, window_us: float, qos: str | None = None,
+    ) -> list[list[float]]:
+        """Deadline attainment over tumbling completion-time windows:
+        `[[window_start_us, attained_fraction], ...]` over completed
+        deadline-carrying requests (one class, or all).  Computed from
+        the result arrays, so it needs no telemetry recording — the
+        per-class SLO timeline `examples/serve_polymul.py` prints.
+        """
+        if self.deadline_ns is None:
+            return []
+        m = self._mask(qos) & np.isfinite(self.deadline_ns)
+        if not m.any():
+            return []
+        series = WindowedSeries(window_us * 1e3, "mean")
+        met = self.latency_ns[m] <= self.deadline_ns[m]
+        for t, ok in zip(self.done_ns[m], met):
+            series.record(float(t), 1.0 if ok else 0.0)
+        return series.points_us()
+
     def class_throughput_jobs_per_ms(self, qos: str) -> float:
         if self.makespan_ns <= 0:
             return 0.0
         return int(self._mask(qos).sum()) / (self.makespan_ns / 1e6)
 
-    def summary(self) -> dict:
+    def summary(self, window_us: float | None = None) -> dict:
+        """Flat report dict.  With `window_us`, per-class blocks gain
+        `deadline_attainment_windows` — the tumbling-window SLO timeline
+        of `windowed_deadline_attainment` (array-derived, available with
+        telemetry off)."""
         out = {
             "submitted": self.submitted,
             "completed": self.completed,
@@ -412,6 +450,9 @@ class SchedulerResult:
                         self.class_throughput_jobs_per_ms(cls),
                     "deadline_attainment": self.deadline_attainment(cls),
                 }
+                if window_us is not None:
+                    block["deadline_attainment_windows"] = \
+                        self.windowed_deadline_attainment(window_us, cls)
                 block.update(self.latency_percentiles_us(qos=cls))
                 per_class[cls] = block
             out["per_class"] = per_class
@@ -562,8 +603,9 @@ class RequestScheduler:
     def _run(self, arrivals: list[tuple[float, Job]]) -> SchedulerResult:
         for job in {j for _, j in arrivals if isinstance(j, ShardedNttJob)}:
             self._validate_gang(job)
+        tracer = Tracer() if self.cfg.telemetry else None
         device = Device(self.cfg, self.topo, policy=self.policy,
-                        pipelined=self.pipelined)
+                        pipelined=self.pipelined, tracer=tracer)
         topo = self.topo
         pending = deque(sorted(arrivals, key=lambda p: p[0]))
         free: list[tuple[float, int]] = [(0.0, b) for b in range(topo.total_banks)]
@@ -666,6 +708,14 @@ class RequestScheduler:
         # gang sub-device spans are gang-relative; the utilization
         # denominator must be the whole run
         stats.extend_span(makespan)
+        tel = None
+        if tracer is not None:
+            for row in range(n):
+                tracer.request_spans.append(
+                    (row, "", "queue_wait", t_arr[row], t_disp[row]))
+                tracer.request_spans.append(
+                    (row, "", "execute", t_disp[row], t_done[row]))
+            tel = TelemetryHandle(tracer)
         return SchedulerResult(
             submitted=n,
             completed=done_count,
@@ -674,6 +724,7 @@ class RequestScheduler:
             dispatch_ns=t_disp,
             done_ns=t_done,
             stats=stats,
+            telemetry=tel,
         )
 
     # -- service dispatch: QoS aging, admission control, batching ------------
@@ -697,10 +748,16 @@ class RequestScheduler:
         requests = list(requests)
         for req in {r.job for r in requests if isinstance(r.job, ShardedNttJob)}:
             self._validate_gang(req)
+        tracer = Tracer() if (policy.telemetry or self.cfg.telemetry) else None
+        window_ns = policy.telemetry_window_us * 1e3
+        if tracer is not None:
+            qd_series = {cls: WindowedSeries(window_ns, "max")
+                         for cls in QOS_CLASSES}
+            rej_series = WindowedSeries(window_ns, "sum")
         # coalesced gang members share one bank's working rows (same job
         # spec), so the single-job fit check in _commands covers batches
         device = Device(self.cfg, self.topo, policy=self.policy,
-                        pipelined=self.pipelined)
+                        pipelined=self.pipelined, tracer=tracer)
         topo = self.topo
         n = len(requests)
         order = sorted(range(n), key=lambda i: (requests[i].arrival_ns, i))
@@ -781,8 +838,11 @@ class RequestScheduler:
                 admitted += 1
                 w = _Waiting(t, seq, req.job, req.qos, req.deadline_ns)
                 if queue:
-                    (lat_q if req.qos == "latency" else tput_q).append(w)
+                    q = lat_q if req.qos == "latency" else tput_q
+                    q.append(w)
                     n_waiting += 1
+                    if tracer is not None:
+                        qd_series[req.qos].record(t, float(len(q)))
                 return w
             row = rid
             rid += 1
@@ -792,6 +852,10 @@ class RequestScheduler:
             status[row] = STATUS_REJECTED
             key = (req.qos, reason)
             rejected_by[key] = rejected_by.get(key, 0) + 1
+            if tracer is not None:
+                tracer.request_events.append(
+                    (seq, req.qos, f"rejected:{reason}", t))
+                rej_series.record(t, 1.0)
             return None
 
         def place(w: _Waiting, row: int, gate: float) -> None:
@@ -885,6 +949,8 @@ class RequestScheduler:
             n_waiting -= 1
             picked = [heapq.heappop(free) for _ in range(k)]
             gate = max(t, max(ft for ft, _ in picked))
+            if tracer is not None:
+                qd_series[winner.qos].record(gate, float(len(winner_q)))
 
             if isinstance(winner.job, ShardedNttJob):
                 flats = [f for _, f in picked]
@@ -997,6 +1063,34 @@ class RequestScheduler:
                 stats.add_service(cls, "submitted", n_cls)
         for (cls, reason), count in rejected_by.items():
             stats.add_service(cls, f"rejected_{reason}", count)
+        tel = None
+        if tracer is not None:
+            # Per-request lifecycle spans, from the result arrays: the
+            # wait span (arrival -> dispatch; "coalesce_wait" when the
+            # row rode a coalesced gang, whose gate may rise to joiner
+            # arrivals) plus "execute" (dispatch -> completion) tile the
+            # whole end-to-end latency — 100% attribution by
+            # construction, which is what report_telemetry.py's >= 95%
+            # gate checks survives export/import.
+            for row in range(n):
+                if status[row] != STATUS_COMPLETED:
+                    continue
+                rid_tag = int(request_ids[row])
+                cls = qos_rows[row]
+                wait = "coalesce_wait" if batched[row] else "queue_wait"
+                tracer.request_spans.append(
+                    (rid_tag, cls, wait, float(t_arr[row]), float(t_disp[row])))
+                tracer.request_spans.append(
+                    (rid_tag, cls, "execute", float(t_disp[row]),
+                     float(t_done[row])))
+            for cls, s in qd_series.items():
+                if len(s):
+                    stats.attach_series(f"queue_depth/{cls}", s)
+            if len(rej_series):
+                stats.attach_series("admission_rejects", rej_series)
+            for name, s in device_series(tracer, window_ns).items():
+                stats.attach_series(name, s)
+            tel = TelemetryHandle(tracer)
         return SchedulerResult(
             submitted=n,
             completed=done_count,
@@ -1014,4 +1108,5 @@ class RequestScheduler:
             batches=n_batches,
             coalesced=n_coalesced,
             seed=seed,
+            telemetry=tel,
         )

@@ -284,7 +284,10 @@ class DeviceService:
         `retain=False` (long-lived callers that consume the result
         immediately — e.g. the `PimSession.submit` shim — opt out so
         the history does not grow unboundedly).  Raises if nothing is
-        pending.
+        pending.  With `ServicePolicy.telemetry` on, the result carries
+        a `telemetry` handle with the epoch's full timeline (request
+        lifecycle spans tagged by submission index = the futures' join
+        key) and its stats a `timeseries` summary block.
         """
         if not self._pending:
             raise RuntimeError("nothing submitted since the last flush")

@@ -78,6 +78,7 @@ from repro.pimsys.scheduler import (
 )
 from repro.pimsys.sharded import ShardedNttPlan, ShardedTimingResult
 from repro.pimsys.stats import StatsRegistry
+from repro.pimsys.telemetry import TelemetryHandle, Tracer
 from repro.pimsys.topology import DeviceTopology
 from repro.pimsys.trace import dump_trace, dumps_trace
 
@@ -332,6 +333,9 @@ class RunResult:
     `trace`  — `TraceHandle` onto the command-level workload, when the
                workload is statically placed (scheduler runs place
                dynamically and carry no trace)
+    `telemetry` — `telemetry.TelemetryHandle` onto the run's recorded
+               timeline when the session's `PimConfig.telemetry` (or the
+               service's `ServicePolicy.telemetry`) is on; None otherwise
     """
 
     op: Op
@@ -339,6 +343,7 @@ class RunResult:
     timing: TimingResult | ShardedTimingResult | MultiBankResult | SchedulerResult | None
     stats: StatsRegistry | None
     trace: TraceHandle | None
+    telemetry: TelemetryHandle | None = None
 
 
 # --------------------------------------------------------------------------
@@ -519,13 +524,19 @@ class PimSession:
             raise ValueError(f"context is for n={ctx.n}, op is n={n}")
         return ctx
 
-    def _single_bank_result(self, op, value, timing, plan) -> RunResult:
+    def _tracer(self) -> Tracer | None:
+        """A fresh per-run `Tracer` when `cfg.telemetry` is on."""
+        return Tracer() if self.cfg.telemetry else None
+
+    def _single_bank_result(self, op, value, timing, plan,
+                            tracer: Tracer | None = None) -> RunResult:
         stats = None
         if timing is not None:
             stats = StatsRegistry()
             stats.add_bank(0, 0, dict(timing.stats))
+        tel = TelemetryHandle(tracer) if tracer is not None else None
         return RunResult(op=op, value=value, timing=timing, stats=stats,
-                         trace=_trace(plan))
+                         trace=_trace(plan), telemetry=tel)
 
     def _run_ntt(self, plan, inputs, ctx, time) -> RunResult:
         op, cfg = plan.op, self.cfg
@@ -545,10 +556,12 @@ class PimSession:
             if not op.forward and op.scale_n_inv:
                 value = np.asarray(mm.np_mulmod(value, ctx.n_inv, ctx.q), np.uint32)
         timing = None
+        tracer = None
         if time:
+            tracer = self._tracer()
             timing = BankTimer(cfg, pipelined=self.pipelined).simulate(
-                plan.commands, plan.param_trace)
-        return self._single_bank_result(op, value, timing, plan)
+                plan.commands, plan.param_trace, tracer=tracer)
+        return self._single_bank_result(op, value, timing, plan, tracer)
 
     def _run_polymul(self, plan, inputs, ctx, time) -> RunResult:
         op, cfg = plan.op, self.cfg
@@ -576,10 +589,12 @@ class PimSession:
             value = bank_i.read_poly(op.n)
             value = np.asarray(mm.np_mulmod(value, ctx.n_inv, ctx.q), np.uint32)
         timing = None
+        tracer = None
         if time:
+            tracer = self._tracer()
             timing = BankTimer(cfg, pipelined=self.pipelined).simulate(
-                plan.commands, plan.param_trace)
-        return self._single_bank_result(op, value, timing, plan)
+                plan.commands, plan.param_trace, tracer=tracer)
+        return self._single_bank_result(op, value, timing, plan, tracer)
 
     def _run_sharded(self, plan, inputs, ctx, single, time) -> RunResult:
         op = plan.op
@@ -594,14 +609,18 @@ class PimSession:
                 value = np.asarray(mm.np_mulmod(value, ctx.n_inv, ctx.q), np.uint32)
         timing = None
         stats = None
+        tracer = None
         if time:
+            tracer = self._tracer()
             timing = sharded.simulate(
                 policy=self.policy,
                 single=single or self.baseline(op.n, op.forward),
-                pipelined=self.pipelined)
+                pipelined=self.pipelined, tracer=tracer)
             stats = timing.stats
         return RunResult(op=op, value=value, timing=timing, stats=stats,
-                         trace=_trace(plan))
+                         trace=_trace(plan),
+                         telemetry=(TelemetryHandle(tracer)
+                                    if tracer is not None else None))
 
     def _run_multibank(self, plan, single) -> RunResult:
         """`count` identical NTT streams on one shared-bus channel — the
@@ -612,7 +631,8 @@ class PimSession:
         cfg, banks = self.cfg, op.count
         single = single or self.baseline(inner.n, inner.forward)
         trace = plan.param_trace  # one device-side cache per bank, same stream
-        ctrl = ChannelController(cfg, policy=self.policy)
+        tracer = self._tracer()
+        ctrl = ChannelController(cfg, policy=self.policy, tracer=tracer)
         for i in range(banks):
             ctrl.enqueue(ctrl.add_bank(pipelined=self.pipelined),
                          plan.inner.commands, job_id=i, param_trace=trace)
@@ -624,7 +644,9 @@ class PimSession:
             raise RuntimeError(
                 f"controller beat the analytic bus bound: {latency} < {analytic}")
         speedup = banks * single.ns / latency
-        stats = StatsRegistry()
+        if tracer is not None:
+            tracer.meta.setdefault("dram_ns", cfg.dram_ns)
+        stats = StatsRegistry(channels=1)
         ctrl.record_stats(stats)
         timing = MultiBankResult(
             banks=banks,
@@ -637,7 +659,9 @@ class PimSession:
             param_hit_rate=stats.param_hit_rate(),
         )
         return RunResult(op=op, value=None, timing=timing, stats=stats,
-                         trace=_trace(plan))
+                         trace=_trace(plan),
+                         telemetry=(TelemetryHandle(tracer)
+                                    if tracer is not None else None))
 
     # -- submit: queued / open-loop traffic through the device service -------
     def scheduler(self) -> RequestScheduler:
@@ -719,4 +743,4 @@ class PimSession:
         # internal service must not accumulate epoch history
         res = svc.flush(retain=False)
         return RunResult(op=plan.op, value=None, timing=res, stats=res.stats,
-                         trace=None)
+                         trace=None, telemetry=res.telemetry)

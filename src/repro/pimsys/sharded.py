@@ -82,6 +82,8 @@ from repro.pimsys.engine import (
 from repro.pimsys.stats import StatsRegistry
 from repro.pimsys.topology import DeviceTopology
 
+_INF_F = math.inf
+
 
 # --------------------------------------------------------------------------
 # Plan structure
@@ -405,7 +407,9 @@ class ShardedNttPlan:
         full_ns = cfg.param_load_cycles * cfg.dram_ns
         hit_ns = param_hit_beats(cfg) * cfg.dram_ns
         x_start: float | None = None
+        tr = dev.tracer
         for stage in self.exchange_stages():
+            st_begin, st_end = _INF_F, 0.0
             for p in stage.pairs:
                 _, eng_u = self._engine(dev, p.u)
                 _, eng_v = self._engine(dev, p.v)
@@ -450,10 +454,21 @@ class ShardedNttPlan:
                     _, v_wr = self._issue(dev, p.v, ColWrite(row, atom, bv_recv))
                     done_v = max(done_v, v_wr)
                 ready[p.u], ready[p.v] = done_u, done_v
+                if tr is not None:
+                    if t0 < st_begin:
+                        st_begin = t0
+                    if done_u > st_end:
+                        st_end = done_u
+                    if done_v > st_end:
+                        st_end = done_v
+            if tr is not None and st_end > 0.0:
+                tr.phases.append(("exchange", f"stride={stage.stride}",
+                                  st_begin, st_end))
         return x_start
 
     def simulate(self, policy: str = "rr", single: TimingResult | None = None,
-                 baseline: bool = True, pipelined: bool = True) -> ShardedTimingResult:
+                 baseline: bool = True, pipelined: bool = True,
+                 tracer=None) -> ShardedTimingResult:
         """Time the full sharded NTT on the device-level memory system.
 
         Pass `single` (the one-bank `simulate_ntt` result) when sweeping
@@ -461,8 +476,12 @@ class ShardedNttPlan:
         sim entirely (speedup then reads 0; the scheduler does this).
         `pipelined=False` forces strictly serial engines (the Fig 6a
         ablation), in the local passes AND the exchange butterflies.
+        `tracer` (a `telemetry.Tracer`) records the full timeline:
+        per-command events through the engines, per-bank local-pass
+        spans, per-stage exchange spans, and every inter-bank burst.
         """
-        dev = Device(self.cfg, self.topo, policy=policy, pipelined=pipelined)
+        dev = Device(self.cfg, self.topo, policy=policy, pipelined=pipelined,
+                     tracer=tracer)
         self._xfer_atoms = 0
         self._xfer_hops = 0
         ready = [0.0] * self.banks
@@ -477,7 +496,12 @@ class ShardedNttPlan:
                 dev.enqueue_flat(self.flat_banks[b], cmds, gate=gates[b],
                                  job_id=("local", b), param_trace=traces[b])
             for ev in dev.drain():
-                ready[ev.job_id[1]] = ev.done
+                b = ev.job_id[1]
+                ready[b] = ev.done
+                if tracer is not None:
+                    tracer.phases.append(
+                        (f"bank{self.flat_banks[b]}", "local",
+                         gates[b], ev.done))
 
         if self.forward:
             busy0 = [c.bus_busy_ns for c in dev.channels]
@@ -506,7 +530,7 @@ class ShardedNttPlan:
         used_channels = len({self.topo.address_of(f).channel
                              for f in self.flat_banks})
         occ = (x_busy / (used_channels * exchange_ns)) if exchange_ns > 0 else 0.0
-        reg = StatsRegistry()
+        reg = StatsRegistry(channels=self.topo.channels)
         for ctrl in dev.channels:
             ctrl.record_stats(reg)
         reg.add_device({"xfer_atoms": self._xfer_atoms,

@@ -23,12 +23,17 @@ def merge_counts(dst: dict, src: dict) -> dict:
 class StatsRegistry:
     """Counters keyed by (channel, bank-within-channel)."""
 
-    def __init__(self):
+    def __init__(self, channels: int | None = None):
+        # declared channel universe (the topology's channel count); a
+        # channel exists even before any traffic lands on it, so span
+        # stretches and summaries must cover silent channels too
+        self._channels = channels or 0
         self._bank: dict[tuple[int, int], dict] = defaultdict(dict)
         self._bus_busy_ns: dict[int, float] = defaultdict(float)
         self._bus_span_ns: dict[int, float] = defaultdict(float)
         self._device: dict = {}
         self._service: dict[tuple[str, str], int] = {}
+        self._series: dict[str, object] = {}
 
     # -- recording -----------------------------------------------------------
     def add_bank(self, channel: int, bank: int, counters: dict) -> None:
@@ -49,8 +54,19 @@ class StatsRegistry:
         `xfer_atoms` / `xfer_hops` inter-bank bursts)."""
         merge_counts(self._device, counters)
 
+    def attach_series(self, name: str, series) -> None:
+        """Attach a windowed time series (`telemetry.WindowedSeries`) so
+        `summary()` carries the timeline next to the counters."""
+        self._series[name] = series
+
     def extend_span(self, span_ns: float) -> None:
-        """Stretch every channel's observation window to `span_ns`."""
+        """Stretch every channel's observation window to `span_ns`.
+
+        Covers the declared channel universe (see `channels()`), not
+        just channels that already recorded bus traffic — a silent
+        channel's utilization is a true 0.0 over the run's span, not an
+        undefined 0/0 that stays zero after traffic arrives later.
+        """
         for ch in self.channels():
             self._bus_span_ns[ch] = max(self._bus_span_ns[ch], span_ns)
 
@@ -80,7 +96,12 @@ class StatsRegistry:
         return {k: v for (c, k), v in self._service.items() if c == qos}
 
     def channels(self) -> list[int]:
-        return sorted({ch for ch, _ in self._bank} | set(self._bus_busy_ns))
+        """Every known channel: the declared universe (constructor
+        `channels=` from the topology) unioned with any channel that has
+        recorded bank or bus activity."""
+        seen = {ch for ch, _ in self._bank} | set(self._bus_busy_ns)
+        seen.update(range(self._channels))
+        return sorted(seen)
 
     def bus_busy_ns(self, channel: int) -> float:
         return self._bus_busy_ns.get(channel, 0.0)
@@ -144,5 +165,9 @@ class StatsRegistry:
         if self._service:
             out["service"] = {
                 f"{qos}/{key}": v for (qos, key), v in sorted(self._service.items())
+            }
+        if self._series:
+            out["timeseries"] = {
+                name: s.points_us() for name, s in sorted(self._series.items())
             }
         return out

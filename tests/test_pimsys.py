@@ -20,6 +20,7 @@ from repro.pimsys import (
     NttJob,
     PolymulJob,
     RequestScheduler,
+    StatsRegistry,
     dumps_trace,
     loads_trace,
     replay_trace,
@@ -300,3 +301,60 @@ def test_device_multichannel_independent_buses():
 
     assert dev.makespan_ns == single  # private buses: no contention at all
     assert shared.makespan_ns > dev.makespan_ns
+
+
+def test_extend_span_reaches_silent_channels():
+    """Regression: `extend_span` before this fix only stretched channels
+    that had already recorded bus traffic, so a silent channel that saw
+    traffic LATER divided by the stale (shorter) span and over-reported
+    its utilization."""
+    reg = StatsRegistry(channels=2)
+    reg.add_bus(0, busy_ns=10.0, span_ns=100.0)
+    reg.extend_span(200.0)
+    # channel 1 was silent at extend time; traffic arrives afterwards
+    reg.add_bus(1, busy_ns=50.0, span_ns=0.0)
+    assert reg.channels() == [0, 1]
+    assert reg.bus_utilization(0) == pytest.approx(10.0 / 200.0)
+    assert reg.bus_utilization(1) == pytest.approx(50.0 / 200.0)
+
+
+def test_stats_summary_empty_registry():
+    reg = StatsRegistry()
+    s = reg.summary()
+    assert s["device_counts"] == {}
+    assert s["energy_nj"] == 0.0
+    assert s["per_channel"] == {}
+    assert "service" not in s and "timeseries" not in s
+    assert reg.service_counts() == {}
+    assert reg.param_hit_rate() == 0.0
+    assert reg.bus_utilization(0) == 0.0
+
+
+def test_param_hit_rate_bank_needs_channel_on_multichannel():
+    reg = StatsRegistry(channels=2)
+    reg.add_bank(0, 0, {"param_hit": 3, "param_miss": 1})
+    reg.add_bank(1, 0, {"param_hit": 1, "param_miss": 3})
+    with pytest.raises(ValueError, match="channel"):
+        reg.param_hit_rate(bank=0)
+    assert reg.param_hit_rate(channel=0, bank=0) == pytest.approx(0.75)
+    assert reg.param_hit_rate(channel=1, bank=0) == pytest.approx(0.25)
+    assert reg.param_hit_rate() == pytest.approx(0.5)
+    # single-channel registries keep the channel-0 default
+    solo = StatsRegistry(channels=1)
+    solo.add_bank(0, 0, {"param_hit": 1, "param_miss": 1})
+    assert solo.param_hit_rate(bank=0) == pytest.approx(0.5)
+
+
+def test_service_counts_rejected_only_run():
+    """An admission-controlled run where one class only ever got
+    rejected: service counters must keep the class visible and
+    `summary()` must carry the per-reason reject keys."""
+    reg = StatsRegistry(channels=1)
+    reg.add_service("latency", "submitted", 4)
+    reg.add_service("latency", "rejected_queue_full", 4)
+    assert reg.service_counts("latency") == {
+        "submitted": 4, "rejected_queue_full": 4}
+    assert reg.service_counts("throughput") == {}
+    s = reg.summary()
+    assert s["service"]["latency/rejected_queue_full"] == 4
+    assert s["service"]["latency/submitted"] == 4
