@@ -7,18 +7,21 @@ issue commands.  The seed implementation ran ~234k cmd/s single-bank and
 dispatch-table/__slots__/bound-locals engine targets (and this benchmark
 guards) at least 2x both.
 
-Three legs:
+Four legs:
   bank      `BankTimer` driving one `BankEngine` in program order
   channel   8 banks arbitrated on one shared bus (`ChannelController`)
   device    4 channels x 4 banks through `DeviceEngine.drain`
+  fastpath  the channel leg's exact workload (8-bank rr gang) through
+            the compiled vectorized evaluator (`repro.pimsys.fastpath`)
+            — same timing to the bit, measured as effective cmd/s
 
 Usage:
     PYTHONPATH=src python -m benchmarks.engine_speed [--n 4096]
         [--repeat 3] [--min-rate CMDS_PER_S]
 
 `--min-rate` exits nonzero if the CHANNEL leg (the historical ~100k
-cmd/s bottleneck the ROADMAP names) falls below the floor — a
-perf-regression guard usable from CI.
+cmd/s bottleneck the ROADMAP names) OR the fastpath leg falls below
+the floor — a perf-regression guard usable from CI.
 """
 import argparse
 import sys
@@ -28,6 +31,7 @@ from repro.core.mapping import RowCentricMapper
 from repro.core.pim_config import PimConfig
 from repro.core.pimsim import BankTimer
 from repro.pimsys import ChannelController, DeviceEngine, DeviceTopology
+from repro.pimsys.fastpath import evaluate_gang, lower_commands
 
 
 def _best(fn, repeat: int) -> float:
@@ -58,6 +62,17 @@ def bench_channel(cfg: PimConfig, cmds, banks: int, repeat: int) -> float:
             ctrl.enqueue(ctrl.add_bank(), cmds, job_id=i)
         t0 = time.perf_counter()
         ctrl.drain()
+        return banks * len(cmds) / (time.perf_counter() - t0)
+
+    return _best(run, repeat)
+
+
+def bench_fastpath(cfg: PimConfig, cmds, banks: int, repeat: int) -> float:
+    lowered = lower_commands(cfg, cmds)  # lowering is once-per-plan work
+
+    def run():
+        t0 = time.perf_counter()
+        evaluate_gang(lowered, banks)
         return banks * len(cmds) / (time.perf_counter() - t0)
 
     return _best(run, repeat)
@@ -96,9 +111,16 @@ def main():
     print(f"engine/channel/N={args.n}/banks=8,{chan:.0f},one shared bus rr arbiter")
     dev = bench_device(cfg, cmds, 4, 4, args.repeat)
     print(f"engine/device/N={args.n}/4ch_x4ba,{dev:.0f},DeviceEngine.drain")
+    fast = bench_fastpath(cfg, cmds, 8, args.repeat)
+    print(f"fastpath/channel/N={args.n}/banks=8,{fast:.0f},"
+          "vectorized evaluator, same workload as the channel leg")
 
     if args.min_rate is not None and chan < args.min_rate:
         print(f"FAIL: channel rate {chan:.0f} < floor {args.min_rate:.0f}",
+              file=sys.stderr)
+        sys.exit(1)
+    if args.min_rate is not None and fast < args.min_rate:
+        print(f"FAIL: fastpath rate {fast:.0f} < floor {args.min_rate:.0f}",
               file=sys.stderr)
         sys.exit(1)
 

@@ -35,15 +35,35 @@ Chrome trace-event JSON — request-lifecycle spans tagged by QoS class,
 feed it to `scripts/report_telemetry.py` for the per-request latency
 breakdown.
 
+`--full` is the fastpath mode the compiled vectorized backend exists
+for: a 1.2M-request homogeneous sweep on the 16-bank serving device
+through `ServicePolicy(backend="fastpath", verify_every=...)`, plus an
+interpreted-engine calibration prefix to measure the sim-rate gain.
+Its deterministic simulated-time points (capacity, p99, service rate)
+are gated against `BENCH_fastpath.json`; wall-clock sim rates ride
+along as ungated annotation rows.  `--quick-full` is the same sweep at
+30k requests (what `scripts/smoke.sh` runs); every point name carries
+the request count, so full and quick-full artifacts never cross-gate.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.serving [--quick] \
         [--json BENCH_serving.json] [--trace-out trace.json]
+    PYTHONPATH=src python -m benchmarks.serving --full \
+        [--json BENCH_fastpath.json]
 """
 import argparse
 import json
+import time
 
 from repro.core.pim_config import PimConfig
-from repro.pimsys import DeviceService, NttOp, PimSession, ServicePolicy
+from repro.pimsys import (
+    DeviceService,
+    NttOp,
+    PimSession,
+    ServicePolicy,
+    ServiceRequest,
+)
+from repro.pimsys.scheduler import poisson_arrivals_ns
 
 SEED_TPUT, SEED_LAT = 0, 1
 N = 256
@@ -154,6 +174,76 @@ def run(emit, quick: bool = False):
          f"admitted={adm.completed}")
 
 
+def _mixed_trace(job, rate_per_us, mix, count, deadline_us):
+    """The `submit_mixed_poisson` arrival convention as a raw
+    `ServiceRequest` trace — the full sweep drives `run_service`
+    directly so a million requests cost no per-future bookkeeping."""
+    n_lat = int(round(count * mix))
+    n_tput = count - n_lat
+    reqs = []
+    if n_tput:
+        reqs += [ServiceRequest(float(t), job, qos="throughput")
+                 for t in poisson_arrivals_ns(
+                     SEED_TPUT, n_tput, rate_per_us * (1 - mix)).tolist()]
+    if n_lat:
+        reqs += [ServiceRequest(float(t), job, qos="latency",
+                                deadline_ns=deadline_us * 1e3)
+                 for t in poisson_arrivals_ns(
+                     SEED_LAT, n_lat, rate_per_us * mix).tolist()]
+    return reqs
+
+
+def run_full(emit, quick: bool = False):
+    """The million-request fastpath sweep (`--full` / `--quick-full`)."""
+    banks = 16
+    count = 30_000 if quick else 1_200_000
+    calib = 600 if quick else 1_500  # interpreted-engine reference prefix
+    mix = 0.25
+    sess = serving_session(banks)
+    plan = sess.compile(NttOp(N))
+    job = plan.job()
+    single_us = sess.baseline(N).ns / 1e3
+    capacity = measured_capacity(sess, plan)
+    deadline_us = 8 * single_us
+    rate = 2.0 * capacity
+    sched = sess.scheduler()
+    sched.prime(job, plan.commands, param_trace=plan.param_trace)
+    base = f"serving_fast/N={N}/banks={banks}/req={count}"
+    emit(f"{base}/capacity", 1e3 / capacity / 1e3,
+         f"capacity={capacity * 1e3:.1f}jobs_ms;single_us={single_us:.1f}")
+
+    # the bounded queue keeps the coalescing scan O(depth), not O(backlog)
+    fast_pol = ServicePolicy(weight_latency=8.0, batch_window_us=10.0,
+                             max_batch=4, max_queue_depth=8 * banks,
+                             bucket_rate_per_us=1.5 * capacity,
+                             bucket_burst=4 * banks,
+                             backend="fastpath", verify_every=1)
+    reqs = _mixed_trace(job, rate, mix, count, deadline_us)
+    t0 = time.perf_counter()
+    res = sched.run_service(reqs, fast_pol,
+                            seed=[SEED_TPUT, SEED_LAT])
+    fast_wall = time.perf_counter() - t0
+    emit_point(emit, f"{base}/fast2x", res)
+
+    eng_pol = ServicePolicy(weight_latency=8.0, batch_window_us=10.0,
+                            max_batch=4, max_queue_depth=8 * banks,
+                            bucket_rate_per_us=1.5 * capacity,
+                            bucket_burst=4 * banks)
+    calib_reqs = _mixed_trace(job, rate, mix, calib, deadline_us)
+    t0 = time.perf_counter()
+    sched.run_service(calib_reqs, eng_pol, seed=[SEED_TPUT, SEED_LAT])
+    eng_wall = time.perf_counter() - t0
+
+    fast_rate = count / fast_wall
+    eng_rate = calib / eng_wall
+    # wall-clock annotation rows: us_per_call=0.0 keeps them out of the
+    # perf gate (host speed is not simulated time)
+    emit(f"{base}/sim_rate", 0.0,
+         f"fast={fast_rate:.0f}req_s;engine={eng_rate:.0f}req_s;"
+         f"gain={fast_rate / eng_rate:.0f}x;fast_wall={fast_wall:.2f}s;"
+         f"calib_req={calib};completed={res.completed}")
+
+
 def record_trace(path: str, quick: bool = False) -> dict:
     """One telemetry-enabled serving point (QoS aging + coalescing at 2x
     measured capacity, 25% latency-class) exported as a Chrome
@@ -199,6 +289,14 @@ def main():
                     help="instead of sweeping: record one telemetry-"
                          "enabled serving point and export its Chrome "
                          "trace-event JSON")
+    ap.add_argument("--full", action="store_true",
+                    help="fastpath mode: 1.2M-request sweep through "
+                         "ServicePolicy(backend='fastpath') plus an "
+                         "interpreted calibration prefix "
+                         "(emit to BENCH_fastpath.json)")
+    ap.add_argument("--quick-full", action="store_true",
+                    help="the --full sweep at 30k requests (what "
+                         "scripts/smoke.sh gates)")
     args = ap.parse_args()
 
     if args.trace_out:
@@ -210,9 +308,13 @@ def main():
 
     records: list = []
     sink = collecting_emit(emit, records) if args.json else emit
+    full = args.full or args.quick_full
 
     print("name,us_per_call,derived")
-    run(sink, quick=args.quick)
+    if full:
+        run_full(sink, quick=args.quick_full and not args.full)
+    else:
+        run(sink, quick=args.quick)
 
     if args.json:
         from benchmarks.run import SCHEMA_VERSION, bench_meta
@@ -221,11 +323,11 @@ def main():
         with open(args.json, "w") as f:
             json.dump(
                 {
-                    "benchmark": "serving",
+                    "benchmark": "serving_fastpath" if full else "serving",
                     "schema_version": SCHEMA_VERSION,
                     "meta": bench_meta(cfg=serving_session(16).cfg,
                                        seeds=seeds),
-                    "quick": args.quick,
+                    "quick": args.quick or (args.quick_full and not args.full),
                     "seeds": seeds,
                     "points": records,
                 },

@@ -18,12 +18,21 @@ documents written before the field existed read as version 1).  Mixed
 versions are refused outright — a layout change must regenerate the
 committed baseline, never be silently compared across it.
 
+Every shared point is printed (baseline, new, delta) so a failing run
+shows the whole sweep's shape, not just the offender; `--write-baseline`
+copies the fresh sweep over the committed baseline in place after the
+check passes — the one-command regeneration path when a deliberate
+timing-model change moves the numbers.
+
 Usage (what `scripts/smoke.sh` runs):
     python scripts/perf_check.py NEW.json BENCH_multibank.json --tol 0.10
     python scripts/perf_check.py NEW.json BENCH_serving.json --tol 0.10
+    python scripts/perf_check.py NEW.json BENCH_fastpath.json --tol 0.10 \
+        --write-baseline   # refresh the committed baseline from NEW
 """
 import argparse
 import json
+import shutil
 import sys
 
 
@@ -42,6 +51,9 @@ def main() -> int:
     ap.add_argument("baseline", help="committed BENCH_multibank.json")
     ap.add_argument("--tol", type=float, default=0.10,
                     help="allowed fractional latency regression (default 0.10)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="on success, copy the fresh sweep over the "
+                         "baseline in place (deliberate regeneration)")
     args = ap.parse_args()
 
     new_doc, base_doc = load_doc(args.new), load_doc(args.baseline)
@@ -62,19 +74,23 @@ def main() -> int:
 
     failures = []
     worst = (0.0, None)
+    print(f"perf_check: {len(shared)} shared points "
+          f"({len(only_new)} new-only, {len(only_base)} baseline-only), "
+          f"tol {args.tol:.0%}")
+    wide = max((len(n) for n in shared), default=4)
     for name in shared:
         b, n = base[name].get("us_per_call", 0.0), new[name].get("us_per_call", 0.0)
         if b <= 0.0:
-            continue  # knee markers and other zero-latency annotation rows
+            # knee markers and other zero-latency annotation rows
+            print(f"perf_check:   {name:<{wide}}  (annotation, not gated)")
+            continue
         ratio = n / b - 1.0
+        print(f"perf_check:   {name:<{wide}}  {b:>10.2f}us -> {n:>10.2f}us "
+              f"({ratio:+.1%})")
         if ratio > worst[0]:
             worst = (ratio, name)
         if ratio > args.tol:
             failures.append((name, b, n, ratio))
-
-    print(f"perf_check: {len(shared)} shared points "
-          f"({len(only_new)} new-only, {len(only_base)} baseline-only), "
-          f"tol {args.tol:.0%}")
     if worst[1] is not None:
         print(f"perf_check: worst regression {worst[0]:+.1%} at {worst[1]}")
     for name, b, n, ratio in failures:
@@ -82,6 +98,9 @@ def main() -> int:
               f"({ratio:+.1%})", file=sys.stderr)
     if failures:
         return 1
+    if args.write_baseline:
+        shutil.copyfile(args.new, args.baseline)
+        print(f"perf_check: baseline {args.baseline} regenerated from {args.new}")
     print("perf_check: OK")
     return 0
 

@@ -18,7 +18,8 @@ timeout "${TEST_TIMEOUT}" python -m pytest -q -m "not slow" \
     tests/test_engine.py tests/test_engine_props.py \
     tests/test_sharded.py tests/test_sharded_props.py \
     tests/test_session.py tests/test_session_props.py \
-    tests/test_service.py tests/test_service_props.py
+    tests/test_service.py tests/test_service_props.py \
+    tests/test_fastpath_props.py
 
 echo "== smoke: device benchmark + perf-regression gate (${BENCH_TIMEOUT}s budget) =="
 # full quick sweep (base + sharded + param-cache) to a staging file,
@@ -40,6 +41,17 @@ timeout "${BENCH_TIMEOUT}" python -m benchmarks.serving --quick \
 python scripts/perf_check.py BENCH_serving.json.new BENCH_serving.json \
     --tol 0.10
 mv BENCH_serving.json.new BENCH_serving.json
+
+echo "== smoke: fastpath serving sweep + perf gate (${BENCH_TIMEOUT}s budget) =="
+# 30k requests through ServicePolicy(backend="fastpath") with every
+# dispatch's profile differentially verified against the interpreted
+# engine, plus the interpreted calibration prefix for the sim-rate
+# annotation; deterministic simulated-time points gate vs the baseline
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.serving --quick-full \
+    --json BENCH_fastpath.json.new
+python scripts/perf_check.py BENCH_fastpath.json.new BENCH_fastpath.json \
+    --tol 0.10
+mv BENCH_fastpath.json.new BENCH_fastpath.json
 
 echo "== smoke: engine commands/s microbenchmark (${BENCH_TIMEOUT}s budget) =="
 # floor well below the ~2x-optimized rate but above the seed's ~100k

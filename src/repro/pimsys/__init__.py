@@ -27,11 +27,15 @@ command-bus arbitration over `core.pimsim.BankEngine`), `scheduler` (the
 dispatcher: legacy FIFO loop + `run_service`, gang-scheduled sharded
 jobs), `sharded` (four-step split of one NTT across banks/channels),
 `trace` (text record/replay), `stats` (device-wide counters, bus
-utilization, energy, per-class service counters), and `telemetry`
+utilization, energy, per-class service counters), `telemetry`
 (opt-in command/phase/request tracing via `PimConfig.telemetry` or
 `ServicePolicy.telemetry`: Perfetto-exportable `TelemetryHandle` on
 `RunResult`/`SchedulerResult`, tumbling-window series in
-`StatsRegistry.summary()`).
+`StatsRegistry.summary()`), and `fastpath` (the compiled vectorized
+timing backend: `PimSession.run(plan, backend="fastpath")` and
+`ServicePolicy(backend="fastpath")` — bit-identical single-run timing
+without the interpreted event loop, `verify`/`verify_stream` as the
+differential oracle).
 
 The pre-session entry points (`core.pimsim.simulate_ntt`,
 `simulate_multibank`, `simulate_ntt_sharded`, `core.polymul.pim_polymul`,
@@ -44,7 +48,18 @@ from repro.pimsys.engine import (
     DeviceEngine,
     RankState,
     param_beat_trace,
+    replay_gang,
 )
+from repro.pimsys.fastpath import (
+    FastpathMismatch,
+    GangResult,
+    LoweredPlan,
+    evaluate_gang,
+    lower_commands,
+    lower_plan,
+)
+from repro.pimsys.fastpath import verify as fastpath_verify
+from repro.pimsys.fastpath import verify_stream
 from repro.pimsys.scheduler import (
     DEFAULT_POLICY,
     QOS_CLASSES,
@@ -107,7 +122,10 @@ __all__ = [
     "DeviceTopology",
     "ExchangePair",
     "ExchangeStage",
+    "FastpathMismatch",
+    "GangResult",
     "InverseNttOp",
+    "LoweredPlan",
     "NttJob",
     "NttOp",
     "PimFuture",
@@ -136,11 +154,17 @@ __all__ = [
     "WindowedSeries",
     "dump_trace",
     "dumps_trace",
+    "evaluate_gang",
+    "fastpath_verify",
     "job_commands",
     "load_trace",
     "loads_trace",
+    "lower_commands",
+    "lower_plan",
     "param_beat_trace",
+    "replay_gang",
     "replay_trace",
+    "verify_stream",
     "twiddle_param_stream",
     "validate_chrome_trace",
 ]

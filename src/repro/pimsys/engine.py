@@ -591,6 +591,23 @@ class ChannelEngine:
         reg.add_bus(self.channel_id, self.bus_busy_ns, self.makespan_ns)
 
 
+def replay_gang(cfg: PimConfig, commands, banks: int, *,
+                param_trace=None, policy: str = "rr",
+                pipelined: bool = True, tracer=None) -> ChannelEngine:
+    """Interpreted evaluation of one homogeneous gang: `banks` copies of
+    one command stream enqueued at t=0 on one shared-bus channel and
+    drained to completion.  This is the differential oracle the fastpath
+    (`repro.pimsys.fastpath`) verifies against — the returned engine
+    carries per-bank `stats`/`end_t`, `bus_busy_ns` and `makespan_ns`
+    (plus the full per-command schedule when a `tracer` is passed)."""
+    eng = ChannelEngine(cfg, policy=policy, tracer=tracer)
+    for i in range(banks):
+        bank = eng.add_bank(pipelined=pipelined)
+        eng.enqueue(bank, commands, job_id=i, param_trace=param_trace)
+    eng.drain()
+    return eng
+
+
 # --------------------------------------------------------------------------
 # Device layer
 # --------------------------------------------------------------------------

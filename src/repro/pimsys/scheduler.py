@@ -194,6 +194,22 @@ class ServicePolicy:
         The result then carries a `TelemetryHandle` and the stats
         registry a `timeseries` summary block.  Off by default — the
         dispatch loop and the device pay nothing.
+    backend / verify_every
+        ``backend="fastpath"`` times every single-bank dispatch (and
+        every coalesced gang) through the compiled vectorized evaluator
+        (`repro.pimsys.fastpath`) instead of stepping the interpreted
+        device command-by-command: each (job, gang-size) gets ONE
+        dedicated-bank profile, evaluated once and replayed as O(1)
+        per-dispatch arithmetic — what makes million-request sweeps
+        tractable.  The model is the dedicated-gang timeline the
+        sharded path already uses (no cross-dispatch bus contention or
+        carried bank state), so absolute timestamps are a model of the
+        interpreted backend's, not a bit-copy; each profile itself IS
+        bit-identical to the interpreted engine, and `verify_every=K`
+        makes every K-th fastpath dispatch prove that by replaying its
+        profile stream through the interpreted oracle (cached per
+        profile; `FastpathMismatch` on any divergence).  Incompatible
+        with telemetry (the fastpath records no per-command events).
     """
 
     weight_latency: float = 1.0
@@ -205,8 +221,19 @@ class ServicePolicy:
     max_batch: int = 8
     telemetry: bool = False
     telemetry_window_us: float = 50.0
+    backend: str = "engine"
+    verify_every: int = 0
 
     def __post_init__(self):
+        if self.backend not in ("engine", "fastpath"):
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             "expected 'engine' or 'fastpath'")
+        if self.verify_every < 0:
+            raise ValueError("verify_every must be >= 0")
+        if self.backend == "fastpath" and self.telemetry:
+            raise ValueError(
+                "backend='fastpath' records no per-command telemetry; "
+                "disable telemetry or use backend='engine'")
         if self.weight_latency <= 0 or self.weight_throughput <= 0:
             raise ValueError("QoS weights must be positive")
         if self.max_queue_depth is not None and self.max_queue_depth < 1:
@@ -300,6 +327,20 @@ class _Batch:
         self.remaining = remaining
         self.flat = flat
         self.max_done = 0.0
+
+
+class _FastProfile:
+    """Dedicated-bank timing profile of one (job, gang size) under
+    `ServicePolicy(backend="fastpath")`: evaluated once by the
+    vectorized fastpath, replayed per dispatch as gate + offsets."""
+
+    __slots__ = ("member_done", "release", "counters", "bus_busy")
+
+    def __init__(self, member_done, release, counters, bus_busy):
+        self.member_done = member_done  # per-member completion offset
+        self.release = release          # bank release offset (max done)
+        self.counters = counters        # whole-gang bank counters
+        self.bus_busy = bus_busy        # whole-gang bus occupancy (ns)
 
 
 # --------------------------------------------------------------------------
@@ -481,6 +522,11 @@ class RequestScheduler:
         # Values are (latency_ns, per-shard counters, per-channel bus
         # busy ns, device counters) — see _sharded_latency.
         self._sharded_cache: dict[tuple, tuple[float, list, dict, dict]] = {}
+        # (job, gang size) -> _FastProfile for ServicePolicy(backend=
+        # "fastpath"); _fast_verified holds the profiles already proven
+        # against the interpreted oracle (verify_every sampling).
+        self._fast_profiles: dict[tuple[Job, int], _FastProfile] = {}
+        self._fast_verified: set[tuple[Job, int]] = set()
 
     # -- injection frontends -------------------------------------------------
     def run_closed_loop(self, jobs: Iterable[Job]) -> SchedulerResult:
@@ -590,6 +636,51 @@ class RequestScheduler:
             doubled = param_beat_trace(self.cfg, job.n, cmds + cmds)
             warm = self._warm_cache[job] = doubled[len(cold):]
         return cold, warm
+
+    def _fast_stream(self, job: Job, members: int):
+        """The concatenated (commands, param_trace) one coalesced gang of
+        `members` same-spec requests runs on its bank: cold first pass,
+        warm steady-state repeats — exactly what the engine backend
+        enqueues on the batch dispatch path."""
+        cmds, trace = self._commands(job)
+        if members == 1:
+            return cmds, trace
+        cold, warm = self._batch_traces(job)
+        stream = cmds * members
+        full = None if cold is None else tuple(cold) + tuple(warm) * (members - 1)
+        return stream, full
+
+    def _fast_profile(self, job: Job, members: int) -> _FastProfile:
+        key = (job, members)
+        hit = self._fast_profiles.get(key)
+        if hit is None:
+            from repro.pimsys.fastpath import evaluate_gang, lower_commands
+
+            stream, trace = self._fast_stream(job, members)
+            lp = lower_commands(self.cfg, stream, trace)
+            g = evaluate_gang(lp, 1, pipelined=self.pipelined)
+            dones = g.dones[:, 0]
+            per = lp.n_cmds // members
+            member_done = tuple(float(dones[m * per:(m + 1) * per].max())
+                                for m in range(members))
+            hit = self._fast_profiles[key] = _FastProfile(
+                member_done, float(g.bank_end_ns[0]),
+                dict(g.counters[0]), g.bus_busy_ns)
+        return hit
+
+    def _verify_fast(self, job: Job, members: int) -> None:
+        """Replay one fastpath profile's stream through the interpreted
+        engine (`FastpathMismatch` on divergence); each distinct
+        profile is proven at most once per scheduler."""
+        key = (job, members)
+        if key in self._fast_verified:
+            return
+        from repro.pimsys.fastpath import verify_stream
+
+        stream, trace = self._fast_stream(job, members)
+        verify_stream(self.cfg, stream, 1, param_trace=trace,
+                      pipelined=self.pipelined)
+        self._fast_verified.add(key)
 
     def _validate_gang(self, job: ShardedNttJob) -> None:
         """Fail fast on an unsatisfiable gang spec — the plan constructor
@@ -748,6 +839,11 @@ class RequestScheduler:
         requests = list(requests)
         for req in {r.job for r in requests if isinstance(r.job, ShardedNttJob)}:
             self._validate_gang(req)
+        fast = policy.backend == "fastpath"
+        if fast and self.cfg.telemetry:
+            raise ValueError(
+                "backend='fastpath' records no per-command telemetry; "
+                "disable cfg.telemetry or use backend='engine'")
         tracer = Tracer() if (policy.telemetry or self.cfg.telemetry) else None
         window_ns = policy.telemetry_window_us * 1e3
         if tracer is not None:
@@ -778,6 +874,10 @@ class RequestScheduler:
         gang_stats: list[tuple] = []
         n_batches = 0
         n_coalesced = 0
+        # fastpath bookkeeping: dispatch counter for verify sampling and
+        # (job, gang size, flat bank) -> use count for stats replay
+        n_fast = 0
+        fast_uses: dict[tuple[Job, int, int], int] = {}
 
         # Admitted-but-undispatched requests, one deque per QoS class.
         # Arrivals ingest in time order, so each deque stays sorted by
@@ -1016,7 +1116,32 @@ class RequestScheduler:
                             gate = w.arrival
 
             flat = picked[0][1]
-            if len(members) == 1:
+            if fast:
+                # O(1) replay of the gang's dedicated-bank profile: the
+                # device never sees the commands, only the bank heap and
+                # the timestamp arrays advance.
+                m = len(members)
+                prof = self._fast_profile(winner.job, m)
+                n_fast += 1
+                if policy.verify_every and n_fast % policy.verify_every == 0:
+                    self._verify_fast(winner.job, m)
+                if m > 1:
+                    n_batches += 1
+                    n_coalesced += m
+                for k_m, w in enumerate(members):
+                    row = rid
+                    rid += 1
+                    place(w, row, gate)
+                    if m > 1:
+                        batched[row] = True
+                    t_done[row] = gate + prof.member_done[k_m]
+                    done_count += 1
+                release = gate + prof.release
+                gang_makespan = max(gang_makespan, release)
+                heapq.heappush(free, (release, flat))
+                fkey = (winner.job, m, flat)
+                fast_uses[fkey] = fast_uses.get(fkey, 0) + 1
+            elif len(members) == 1:
                 cmds, trace = self._commands(winner.job)
                 row = rid
                 rid += 1
@@ -1055,6 +1180,18 @@ class RequestScheduler:
             for ch, busy in bus_busy.items():
                 stats.add_bus(ch, busy, 0.0)
             stats.add_device(dev_c)
+        # fastpath dispatches never touched the device: fold each
+        # profile's counters back in, scaled by its per-bank use count
+        fast_bus: dict[int, float] = {}
+        for (job, m, f), cnt in fast_uses.items():
+            prof = self._fast_profiles[(job, m)]
+            addr = topo.address_of(f)
+            stats.add_bank(addr.channel, topo.local_id(addr),
+                           {k: v * cnt for k, v in prof.counters.items()})
+            fast_bus[addr.channel] = (fast_bus.get(addr.channel, 0.0)
+                                      + prof.bus_busy * cnt)
+        for ch, busy in fast_bus.items():
+            stats.add_bus(ch, busy, 0.0)
         makespan = max(device.makespan_ns, gang_makespan)
         stats.extend_span(makespan)
         for cls in QOS_CLASSES:

@@ -33,6 +33,12 @@ admission control (rejected requests resolve with status ``rejected``
 rather than raising), window-based coalescing of same-`(cfg, op)`
 arrivals into gang issues that replay the frozen `CompiledPlan` with
 zero mapper regeneration, and per-request deadline/SLO accounting.
+`ServicePolicy(backend="fastpath", verify_every=K)` swaps the
+interpreted device for the compiled vectorized timing backend
+(`repro.pimsys.fastpath`) — O(1) profile replay per dispatch, the
+knob that makes million-request sweeps (`benchmarks/serving.py
+--full`) tractable, with every K-th dispatch differentially checked
+against the interpreted oracle.
 
 `PimSession.submit()` is now a one-`DeprecationWarning` shim over this
 service with the default (FIFO-equivalent) policy — bit-identical to the

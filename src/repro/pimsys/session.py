@@ -69,6 +69,7 @@ from repro.core.pimsim import (
 )
 from repro.core.polymul import polymul_phases
 from repro.pimsys.controller import ChannelController
+from repro.pimsys.fastpath import evaluate_gang, lower_plan, phase_breakdown
 from repro.pimsys.scheduler import (
     NttJob,
     PolymulJob,
@@ -390,6 +391,7 @@ class PimSession:
         self.policy = policy
         self.pipelined = pipelined
         self._plans: dict[tuple[PimConfig, Op], CompiledPlan] = {}
+        self._lowered: dict[tuple[PimConfig, Op], object] = {}
         self.plan_hits = 0
         self.plan_misses = 0
         self._baselines: dict[tuple[int, bool], TimingResult] = {}
@@ -482,7 +484,7 @@ class PimSession:
     def run(self, plan: CompiledPlan | Op, *inputs: np.ndarray,
             ctx: ntt_ref.NttContext | None = None,
             single: TimingResult | None = None,
-            time: bool = True) -> RunResult:
+            time: bool = True, backend: str = "engine") -> RunResult:
         """Execute a compiled plan: functional when `*inputs` are given,
         timed unless `time=False`, both by default.
 
@@ -490,17 +492,34 @@ class PimSession:
         non-default modulus); `single` overrides the cached one-bank
         baseline that `ShardedNttOp` / `BatchOp(NttOp)` speedups
         reference (meaningless — and ignored — for the other ops).
+        `backend="fastpath"` times `NttOp` / `PolymulOp` /
+        `BatchOp(NttOp)` through the compiled vectorized evaluator
+        (`repro.pimsys.fastpath`) — bit-identical numbers without the
+        interpreted per-command event loop.  Sharded ops, queued
+        `BatchOp(PolymulOp)` traffic, and telemetry runs stay on the
+        interpreted engine.
         """
+        if backend not in ("engine", "fastpath"):
+            raise ValueError(f"unknown backend {backend!r}; "
+                             "expected 'engine' or 'fastpath'")
+        if backend == "fastpath" and self.cfg.telemetry:
+            raise ValueError(
+                "backend='fastpath' records no per-command telemetry; "
+                "disable cfg.telemetry or use backend='engine'")
         if not isinstance(plan, CompiledPlan):
             plan = self.compile(plan)
         if plan.cfg != self.cfg:
             raise ValueError("plan was compiled for a different PimConfig")
         op = plan.op
         if isinstance(op, NttOp):
-            return self._run_ntt(plan, inputs, ctx, time)
+            return self._run_ntt(plan, inputs, ctx, time, backend)
         if isinstance(op, PolymulOp):
-            return self._run_polymul(plan, inputs, ctx, time)
+            return self._run_polymul(plan, inputs, ctx, time, backend)
         if isinstance(op, ShardedNttOp):
+            if backend == "fastpath":
+                raise ValueError("backend='fastpath' models homogeneous "
+                                 "single-channel gangs; ShardedNttOp runs "
+                                 "on the interpreted engine")
             return self._run_sharded(plan, inputs, ctx, single, time)
         if isinstance(op, BatchOp):
             if inputs:
@@ -510,7 +529,12 @@ class PimSession:
                 return RunResult(op=op, value=None, timing=None, stats=None,
                                  trace=_trace(plan))
             if isinstance(op.op, NttOp):
-                return self._run_multibank(plan, single)
+                return self._run_multibank(plan, single, backend)
+            if backend == "fastpath":
+                raise ValueError("backend='fastpath' cannot drive queued "
+                                 "BatchOp(PolymulOp) traffic; use "
+                                 "ServicePolicy(backend='fastpath') on the "
+                                 "serving path instead")
             return self._submit(plan)
         raise TypeError(f"cannot run {op!r}")
 
@@ -528,6 +552,24 @@ class PimSession:
         """A fresh per-run `Tracer` when `cfg.telemetry` is on."""
         return Tracer() if self.cfg.telemetry else None
 
+    def _lowered_for(self, plan: CompiledPlan):
+        """Session-cached `LoweredPlan` for a compiled plan (keyed like
+        the plan cache, so repeated fastpath runs lower zero commands)."""
+        inner = plan.inner if plan.inner is not None else plan
+        key = (self.cfg, inner.op)
+        lp = self._lowered.get(key)
+        if lp is None:
+            lp = self._lowered[key] = lower_plan(self.cfg, inner)
+        return lp
+
+    def _fast_timing(self, plan: CompiledPlan) -> TimingResult:
+        """One-bank fastpath timing, bit-identical to `BankTimer`."""
+        lp = self._lowered_for(plan)
+        g = evaluate_gang(lp, 1, pipelined=self.pipelined)
+        return TimingResult(ns=float(g.bank_end_ns[0]),
+                            stats=dict(g.counters[0]),
+                            phase_ns=phase_breakdown(lp, g.dones[:, 0]))
+
     def _single_bank_result(self, op, value, timing, plan,
                             tracer: Tracer | None = None) -> RunResult:
         stats = None
@@ -538,7 +580,7 @@ class PimSession:
         return RunResult(op=op, value=value, timing=timing, stats=stats,
                          trace=_trace(plan), telemetry=tel)
 
-    def _run_ntt(self, plan, inputs, ctx, time) -> RunResult:
+    def _run_ntt(self, plan, inputs, ctx, time, backend="engine") -> RunResult:
         op, cfg = plan.op, self.cfg
         value = None
         if inputs:
@@ -558,12 +600,16 @@ class PimSession:
         timing = None
         tracer = None
         if time:
-            tracer = self._tracer()
-            timing = BankTimer(cfg, pipelined=self.pipelined).simulate(
-                plan.commands, plan.param_trace, tracer=tracer)
+            if backend == "fastpath":
+                timing = self._fast_timing(plan)
+            else:
+                tracer = self._tracer()
+                timing = BankTimer(cfg, pipelined=self.pipelined).simulate(
+                    plan.commands, plan.param_trace, tracer=tracer)
         return self._single_bank_result(op, value, timing, plan, tracer)
 
-    def _run_polymul(self, plan, inputs, ctx, time) -> RunResult:
+    def _run_polymul(self, plan, inputs, ctx, time,
+                     backend="engine") -> RunResult:
         op, cfg = plan.op, self.cfg
         value = None
         if inputs:
@@ -591,9 +637,12 @@ class PimSession:
         timing = None
         tracer = None
         if time:
-            tracer = self._tracer()
-            timing = BankTimer(cfg, pipelined=self.pipelined).simulate(
-                plan.commands, plan.param_trace, tracer=tracer)
+            if backend == "fastpath":
+                timing = self._fast_timing(plan)
+            else:
+                tracer = self._tracer()
+                timing = BankTimer(cfg, pipelined=self.pipelined).simulate(
+                    plan.commands, plan.param_trace, tracer=tracer)
         return self._single_bank_result(op, value, timing, plan, tracer)
 
     def _run_sharded(self, plan, inputs, ctx, single, time) -> RunResult:
@@ -622,15 +671,22 @@ class PimSession:
                          telemetry=(TelemetryHandle(tracer)
                                     if tracer is not None else None))
 
-    def _run_multibank(self, plan, single) -> RunResult:
+    def _run_multibank(self, plan, single, backend="engine") -> RunResult:
         """`count` identical NTT streams on one shared-bus channel — the
         §VII multi-bank experiment, cross-checked against the analytic
-        bus bound (bit-identical to legacy `simulate_multibank`)."""
+        bus bound (bit-identical to legacy `simulate_multibank`).
+
+        With `backend="fastpath"` the gang is timed by the vectorized
+        evaluator instead of the interpreted `ChannelController` —
+        same makespan, bus occupancy, and per-bank counters to the bit
+        (rr arbitration only; telemetry already rejected in `run`)."""
         op: BatchOp = plan.op
         inner: NttOp = op.op
         cfg, banks = self.cfg, op.count
         single = single or self.baseline(inner.n, inner.forward)
         trace = plan.param_trace  # one device-side cache per bank, same stream
+        if backend == "fastpath":
+            return self._run_multibank_fast(plan, single, banks, trace)
         tracer = self._tracer()
         ctrl = ChannelController(cfg, policy=self.policy, tracer=tracer)
         for i in range(banks):
@@ -662,6 +718,39 @@ class PimSession:
                          trace=_trace(plan),
                          telemetry=(TelemetryHandle(tracer)
                                     if tracer is not None else None))
+
+    def _run_multibank_fast(self, plan, single, banks, trace) -> RunResult:
+        if self.policy != "rr":
+            raise ValueError(
+                f"backend='fastpath' models round-robin arbitration only; "
+                f"policy={self.policy!r} needs backend='engine'")
+        cfg = self.cfg
+        inner: NttOp = plan.op.op
+        lp = self._lowered_for(plan)
+        g = evaluate_gang(lp, banks, pipelined=self.pipelined)
+        latency = g.makespan_ns
+        analytic = analytic_multibank_bound(inner.n, banks, cfg, single,
+                                            param_trace=trace)
+        if latency < analytic - 1e-6:
+            raise RuntimeError(
+                f"fastpath beat the analytic bus bound: {latency} < {analytic}")
+        speedup = banks * single.ns / latency
+        stats = StatsRegistry(channels=1)
+        for b in range(banks):
+            stats.add_bank(0, b, dict(g.counters[b]))
+        stats.add_bus(0, g.bus_busy_ns, latency)
+        timing = MultiBankResult(
+            banks=banks,
+            latency_ns=latency,
+            speedup=speedup,
+            efficiency=speedup / banks,
+            bus_utilization=min(1.0, g.bus_busy_ns / latency),
+            analytic_latency_ns=analytic,
+            policy=self.policy,
+            param_hit_rate=stats.param_hit_rate(),
+        )
+        return RunResult(op=plan.op, value=None, timing=timing, stats=stats,
+                         trace=_trace(plan))
 
     # -- submit: queued / open-loop traffic through the device service -------
     def scheduler(self) -> RequestScheduler:

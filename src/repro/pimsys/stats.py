@@ -141,6 +141,38 @@ class StatsRegistry:
         total = hits + c.get("param_miss", 0)
         return hits / total if total else 0.0
 
+    def diff(self, other: "StatsRegistry") -> dict:
+        """Structured difference against another registry — empty when
+        the two agree on every per-bank counter, device counter, and
+        per-channel bus occupancy.  The fastpath differential tests use
+        this to report WHICH counter diverged instead of a bare
+        dict-inequality failure; `refresh` is still compared (the
+        backends are bit-identical on a shared timeline)."""
+        out: dict = {}
+        banks = set(self._bank) | set(other._bank)
+        for key in sorted(banks):
+            a = self._bank.get(key, {})
+            b = other._bank.get(key, {})
+            if a != b:
+                keys = set(a) | set(b)
+                out[f"bank{key}"] = {
+                    k: (a.get(k), b.get(k))
+                    for k in sorted(keys) if a.get(k) != b.get(k)
+                }
+        if self._device != other._device:
+            keys = set(self._device) | set(other._device)
+            out["device"] = {
+                k: (self._device.get(k), other._device.get(k))
+                for k in sorted(keys)
+                if self._device.get(k) != other._device.get(k)
+            }
+        chans = set(self._bus_busy_ns) | set(other._bus_busy_ns)
+        for ch in sorted(chans):
+            a, b = self.bus_busy_ns(ch), other.bus_busy_ns(ch)
+            if a != b:
+                out[f"bus{ch}"] = (a, b)
+        return out
+
     #: per-bank counters that are derived metrics, not issued commands
     NON_COMMAND_KEYS = ("bu_ops", "refresh", "param_hit", "param_miss")
 
