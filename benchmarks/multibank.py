@@ -141,14 +141,22 @@ def _sched_sweep(emit, n, topo, rate, jobs, nb=4):
         )
 
 
-def _sharded_sweep(emit, sizes, bank_counts, nbs, channels=4, banks_per_rank=8):
+def _sharded_sweep(emit, sizes, bank_counts, nbs, channels=8, banks_per_rank=2):
     """One size-N NTT split over `banks` banks (vs `banks` independent
     NTTs in `_bank_sweep`): the four-step decomposition's local passes
-    run bus-arbitrated per channel, the exchange stages cross channels."""
+    run bus-arbitrated per channel, the exchange stages cross channels.
+
+    Each sweep point is followed by per-stride annotation rows (the
+    exchange-stage breakdown the pipelined engine measures live: span,
+    bus occupancy over the touched channels, cross-pair overlap
+    fraction), and each (N, Nb) group ends with one opt-in
+    `placement=conflict` run at the top bank count so the committed
+    artifact records the measured identity-vs-conflict answer."""
     for n in sizes:
         for nb in nbs:
             sess = PimSession(PimConfig(num_buffers=nb, num_channels=channels,
                                         num_banks=banks_per_rank))
+            top = None
             for banks in bank_counts:
                 if n // banks < sess.cfg.atom_words:
                     continue
@@ -163,6 +171,29 @@ def _sharded_sweep(emit, sizes, bank_counts, nbs, channels=4, banks_per_rank=8):
                     f"hops={r.xfer_hops};"
                     f"single_us={r.single_ns / 1e3:.1f}",
                 )
+                for st in r.stage_breakdown:
+                    emit(
+                        f"sharded/N={n}/Nb={nb}/banks={banks}"
+                        f"/stride={st.stride}",
+                        0.0,
+                        f"span_us={st.span_ns / 1e3:.2f};"
+                        f"occ={st.occupancy:.2f};"
+                        f"overlap={st.overlap:.2f};"
+                        f"pairs={st.pairs};ch={st.channels}",
+                    )
+                if banks > 1:
+                    top = (banks, r.efficiency)
+            if top is None:
+                continue
+            banks, id_eff = top
+            rc = sess.run(sess.compile(
+                ShardedNttOp(n, banks, placement="conflict"))).timing
+            emit(
+                f"sharded/N={n}/Nb={nb}/banks={banks}/placement=conflict",
+                0.0,
+                f"eff={rc.efficiency:.2f};identity_eff={id_eff:.2f};"
+                f"xchg_us={rc.exchange_ns / 1e3:.1f}",
+            )
 
 
 def run(emit, quick: bool = False):
@@ -180,12 +211,16 @@ def run(emit, quick: bool = False):
 
 
 def run_sharded(emit, quick: bool = False):
+    # 8ch x 2ba so 16 banks spread one pair per channel: the acceptance
+    # topology where the pipelined exchange holds eff >= 0.8 at 16 banks
     if quick:
-        _sharded_sweep(emit, sizes=[1024, 4096], bank_counts=[1, 2, 4, 8],
-                       nbs=(2,), channels=2, banks_per_rank=4)
+        _sharded_sweep(emit, sizes=[1024, 4096],
+                       bank_counts=[1, 2, 4, 8, 16], nbs=(2,),
+                       channels=8, banks_per_rank=2)
         return
     _sharded_sweep(emit, sizes=[4096, 16384, 65536],
-                   bank_counts=[2, 4, 8, 16, 32], nbs=(2, 4))
+                   bank_counts=[1, 2, 4, 8, 16, 32], nbs=(2, 4),
+                   channels=8, banks_per_rank=4)
 
 
 def _param_cache_sweep(emit, sizes, bank_counts, entries_list, nb=2):

@@ -9,9 +9,22 @@ require a baseline to exist first.  The simulator is deterministic, so
 a regression here is a timing-model or scheduling change, not noise.
 
 Gated artifacts: `BENCH_multibank.json` (device sweeps, `us_per_call`
-is a latency) and `BENCH_serving.json` (serving sweeps, `us_per_call`
+is a latency), `BENCH_serving.json` (serving sweeps, `us_per_call`
 is the latency-class p99 or the throughput-class us/job — both
-lower-is-better, so the same rule gates the p99 and the service rate).
+lower-is-better, so the same rule gates the p99 and the service rate),
+and `BENCH_tpu.json` (the NttBackend lane: analytic roofline terms and
+the pim-sim modeled latency are deterministic and gate; wall-clock
+rows are zero-latency annotations and do not).
+
+Points whose parsed derived metrics carry an `eff` scaling-efficiency
+column (the sharded sweeps) are additionally gated on it: a drop of
+more than `--eff-tol` (default 0.05, absolute) versus the baseline
+fails even when the point's latency is within `--tol` — a sharded
+point can get "faster" while its one-bank baseline got faster still,
+which is exactly the knee regression the latency rule cannot see.
+Efficiency is higher-is-better and bounded, so the tolerance is
+absolute, not fractional.  Annotation rows (us_per_call <= 0) with an
+`eff` on both sides are eff-gated too.
 
 Both artifacts carry a `schema_version` (`benchmarks.run.SCHEMA_VERSION`;
 documents written before the field existed read as version 1).  Mixed
@@ -51,6 +64,9 @@ def main() -> int:
     ap.add_argument("baseline", help="committed BENCH_multibank.json")
     ap.add_argument("--tol", type=float, default=0.10,
                     help="allowed fractional latency regression (default 0.10)")
+    ap.add_argument("--eff-tol", type=float, default=0.05,
+                    help="allowed absolute drop of a point's `eff` "
+                         "scaling-efficiency column (default 0.05)")
     ap.add_argument("--write-baseline", action="store_true",
                     help="on success, copy the fresh sweep over the "
                          "baseline in place (deliberate regeneration)")
@@ -73,20 +89,31 @@ def main() -> int:
     only_base = sorted(set(base) - set(new))
 
     failures = []
+    eff_failures = []
     worst = (0.0, None)
     print(f"perf_check: {len(shared)} shared points "
           f"({len(only_new)} new-only, {len(only_base)} baseline-only), "
-          f"tol {args.tol:.0%}")
+          f"tol {args.tol:.0%}, eff-tol {args.eff_tol:.2f}")
     wide = max((len(n) for n in shared), default=4)
     for name in shared:
         b, n = base[name].get("us_per_call", 0.0), new[name].get("us_per_call", 0.0)
+        # the eff gate is independent of the latency gate: it fires even
+        # on annotation rows, and even when the latency itself improved
+        be, ne = base[name].get("eff"), new[name].get("eff")
+        eff_note = ""
+        if isinstance(be, (int, float)) and isinstance(ne, (int, float)):
+            drop = be - ne
+            eff_note = f"  eff {be:.2f} -> {ne:.2f}"
+            if drop > args.eff_tol:
+                eff_failures.append((name, be, ne, drop))
         if b <= 0.0:
             # knee markers and other zero-latency annotation rows
-            print(f"perf_check:   {name:<{wide}}  (annotation, not gated)")
+            print(f"perf_check:   {name:<{wide}}  (annotation, not gated)"
+                  f"{eff_note}")
             continue
         ratio = n / b - 1.0
         print(f"perf_check:   {name:<{wide}}  {b:>10.2f}us -> {n:>10.2f}us "
-              f"({ratio:+.1%})")
+              f"({ratio:+.1%}){eff_note}")
         if ratio > worst[0]:
             worst = (ratio, name)
         if ratio > args.tol:
@@ -96,7 +123,10 @@ def main() -> int:
     for name, b, n, ratio in failures:
         print(f"perf_check: REGRESSION {name}: {b:.2f}us -> {n:.2f}us "
               f"({ratio:+.1%})", file=sys.stderr)
-    if failures:
+    for name, be, ne, drop in eff_failures:
+        print(f"perf_check: EFFICIENCY DROP {name}: eff {be:.2f} -> {ne:.2f} "
+              f"(-{drop:.2f} > {args.eff_tol:.2f})", file=sys.stderr)
+    if failures or eff_failures:
         return 1
     if args.write_baseline:
         shutil.copyfile(args.new, args.baseline)

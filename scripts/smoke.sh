@@ -32,6 +32,17 @@ python scripts/perf_check.py BENCH_multibank.json.new BENCH_multibank.json \
     --tol 0.10
 mv BENCH_multibank.json.new BENCH_multibank.json
 
+echo "== smoke: NttBackend differential + TPU lane gate (${BENCH_TIMEOUT}s budget) =="
+# the three-lane {reference, pim-sim, pallas} differential must hold
+# bit-exactly (tests/test_backend.py runs even without hypothesis/jax),
+# then the tpu_ntt harness regenerates its gated artifact the same way
+# the device sweeps do
+timeout "${TEST_TIMEOUT}" python -m pytest -q tests/test_backend.py
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.tpu_ntt --quick \
+    --json BENCH_tpu.json.new
+python scripts/perf_check.py BENCH_tpu.json.new BENCH_tpu.json --tol 0.10
+mv BENCH_tpu.json.new BENCH_tpu.json
+
 echo "== smoke: serving sweep + p99 perf gate (${BENCH_TIMEOUT}s budget) =="
 # rate x QoS mix x batching window over the DeviceService futures path;
 # the gate fails on >10% regression of latency-class p99 or

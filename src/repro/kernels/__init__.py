@@ -1,1 +1,5 @@
-from repro.kernels import ops  # noqa: F401
+try:  # the pallas op library needs jax; the backend registry does not
+    from repro.kernels import ops  # noqa: F401
+except ImportError:  # pragma: no cover - exercised only on jax-less hosts
+    ops = None  # type: ignore[assignment]
+from repro.kernels import backend  # noqa: F401

@@ -399,6 +399,28 @@ class ChannelEngine:
         self.bus_busy_ns += hold_ns
         return s
 
+    def earliest_issue(self, bank: int, cmd: Command,
+                       not_before: float = 0.0,
+                       param_ns: float | None = None) -> float:
+        """Non-mutating: the start time `issue_direct` would produce for
+        `cmd` right now (bus grant, rank gates, and the bank's internal
+        hazards included).  The sharded exchange's pipelined driver
+        ranks competing pair chains by this estimate so a command
+        stalled on a data hazard never parks the channel bus ahead of
+        work that could start sooner."""
+        eng = self.engines[bank]
+        if param_ns is None:
+            param_ns = self._t_param if cmd.__class__ in PARAM_OPS else 0.0
+        lb = not_before if not_before > self.bus_free else self.bus_free
+        if self._rank_on:
+            cls = cmd.__class__
+            kind = _RK_ACT if cls is Act else _RANK_KIND.get(cls, _RK_NONE)
+            if kind != _RK_NONE:
+                g = self.ranks[self._rank_of[bank]].gate(kind, bank)
+                if g > lb:
+                    lb = g
+        return eng.earliest_start(cmd, lb, param_ns)
+
     def issue_direct(self, bank: int, cmd: Command, not_before: float = 0.0,
                      param_ns: float | None = None,
                      code: int = _P_NONE) -> tuple[float, float]:

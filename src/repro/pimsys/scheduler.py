@@ -844,6 +844,13 @@ class RequestScheduler:
             raise ValueError(
                 "backend='fastpath' records no per-command telemetry; "
                 "disable cfg.telemetry or use backend='engine'")
+        if fast and any(isinstance(r.job, ShardedNttJob) for r in requests):
+            # fail loudly rather than silently timing the gang on the
+            # interpreted engine while every other dispatch is fastpath
+            raise ValueError(
+                "backend='fastpath' does not support sharded plans: "
+                "ShardedNttJob gangs need the interpreted engine's "
+                "cross-bank exchange model; use backend='engine'")
         tracer = Tracer() if (policy.telemetry or self.cfg.telemetry) else None
         window_ns = policy.telemetry_window_us * 1e3
         if tracer is not None:

@@ -124,12 +124,19 @@ class PolymulOp:
 
 @dataclasses.dataclass(frozen=True)
 class ShardedNttOp:
-    """ONE size-n NTT four-step-sharded over `banks` banks/channels."""
+    """ONE size-n NTT four-step-sharded over `banks` banks/channels.
+
+    `placement` selects the sub-NTT -> bank map: "identity" (the
+    channel-interleaved default) or "conflict"
+    (`sharded.conflict_aware_flat_banks`: exchange partners on distinct
+    channels at every stride).
+    """
 
     n: int
     banks: int = 2
     forward: bool = False
     scale_n_inv: bool = True
+    placement: str = "identity"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -464,7 +471,8 @@ class PimSession:
         if isinstance(op, ShardedNttOp):
             sharded = ShardedNttPlan(
                 cfg, op.n, op.banks, forward=op.forward,
-                topo=self.topo if self._explicit_topo else None)
+                topo=self.topo if self._explicit_topo else None,
+                placement=op.placement)
             locals_ = sharded.local_streams()
             return CompiledPlan(
                 cfg=cfg, op=op, commands=(),
@@ -517,9 +525,11 @@ class PimSession:
             return self._run_polymul(plan, inputs, ctx, time, backend)
         if isinstance(op, ShardedNttOp):
             if backend == "fastpath":
-                raise ValueError("backend='fastpath' models homogeneous "
-                                 "single-channel gangs; ShardedNttOp runs "
-                                 "on the interpreted engine")
+                raise ValueError(
+                    "backend='fastpath' does not support sharded plans: "
+                    "the cross-bank exchange phase needs the interpreted "
+                    "engine's per-command bus model; run ShardedNttOp "
+                    "with backend='engine'")
             return self._run_sharded(plan, inputs, ctx, single, time)
         if isinstance(op, BatchOp):
             if inputs:

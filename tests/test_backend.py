@@ -1,0 +1,78 @@
+"""Deterministic differential over the unified `NttBackend` registry.
+
+The three lanes — reference (numpy), pim-sim (FunctionalBank +
+BankTimer), pallas (jax interpret mode) — implement ONE transform
+contract; these tests pin them bit-exactly against each other on fixed
+grids.  Unlike `tests/test_kernels.py` (which needs hypothesis and jax
+at import), this module runs everywhere: the pallas lane simply drops
+out of `available_backends()` on jax-less hosts, and the smoke script
+leans on that to keep the differential in the always-on tier.
+"""
+import numpy as np
+import pytest
+
+from repro.core import modmath as mm
+from repro.kernels.backend import (
+    BACKEND_NAMES,
+    available_backends,
+    get_backend,
+)
+
+Q = mm.DEFAULT_Q
+
+
+def rand(shape, seed=42):
+    return np.random.default_rng(seed).integers(0, Q, shape).astype(np.uint32)
+
+
+def test_backend_registry_names_and_errors():
+    assert set(BACKEND_NAMES) == {"reference", "pim-sim", "pallas"}
+    with pytest.raises(ValueError, match="unknown NTT backend"):
+        get_backend("fastmath")
+
+
+@pytest.mark.parametrize("forward", [True, False])
+@pytest.mark.parametrize("n", [256, 1024])
+def test_backend_differential_bit_exact(n, forward):
+    """Every available backend must agree BIT-exactly with the reference
+    on the same inputs, both directions — one transform contract, not
+    three similar ones."""
+    ref_b = get_backend("reference")
+    x = rand((2, n), seed=n + forward)
+    exp = ref_b.ntt(x, forward=forward)
+    ran = []
+    for b in available_backends():
+        got = b.ntt(x, forward=forward)
+        assert got.dtype == np.uint32
+        assert np.array_equal(got, exp), (b.name, n, forward)
+        ran.append(b.name)
+    assert "reference" in ran and "pim-sim" in ran  # always runnable
+
+
+def test_backend_roundtrip_and_1d():
+    x = rand(512)
+    for b in available_backends():
+        back = b.ntt(b.ntt(x, forward=True), forward=False)
+        assert back.shape == (512,)
+        assert np.array_equal(back, x), b.name
+
+
+def test_backend_input_validation():
+    b = get_backend("reference")
+    with pytest.raises(ValueError, match="power of two"):
+        b.ntt(np.zeros(100, np.uint32))
+    with pytest.raises(ValueError, match="expected"):
+        b.ntt(np.zeros((2, 2, 2), np.uint32))
+
+
+def test_backend_modeled_latency():
+    """Only the PIM lane has an architecture model; its number must be
+    the session's own `NttOp` latency, cached across calls."""
+    from repro.pimsys import NttOp, PimSession
+
+    b = get_backend("pim-sim")
+    ns = b.modeled_latency_ns(1024)
+    sess = PimSession(b.cfg)
+    assert ns == sess.run(sess.compile(NttOp(1024, forward=True))).timing.ns
+    assert b.modeled_latency_ns(1024) == ns  # cache hit, same answer
+    assert get_backend("reference").modeled_latency_ns(1024) is None

@@ -164,3 +164,22 @@ def test_kernel_delta_transform(seed):
     delta[0, 0] = 1
     out = np.asarray(ntt_pallas(delta, ctx))
     np.testing.assert_array_equal(out, np.ones((1, n), np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# NttBackend: the unified {reference, pim-sim, pallas} differential
+# ---------------------------------------------------------------------------
+
+
+@given(st.sampled_from([256, 1024]), st.booleans(), st.integers(0, 2**31 - 1))
+@settings(max_examples=8)
+def test_backend_differential_property(n, forward, seed):
+    """Random inputs, both directions: every available backend agrees
+    BIT-exactly with the reference.  `tests/test_backend.py` is the
+    deterministic twin that runs even without hypothesis."""
+    from repro.kernels.backend import available_backends, get_backend
+
+    x = np.random.default_rng(seed).integers(0, Q, (2, n)).astype(np.uint32)
+    exp = get_backend("reference").ntt(x, forward=forward)
+    for b in available_backends():
+        assert np.array_equal(b.ntt(x, forward=forward), exp), b.name

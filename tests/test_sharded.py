@@ -356,3 +356,135 @@ def test_sharded_explicit_placement_channels_matter():
     assert same.xfer_hops == 0
     # both orders of magnitude sane and functionally the same plan
     assert cross.xfer_atoms == same.xfer_atoms
+
+
+# ---------------------------------------------------------------------------
+# pipelined exchange: stage breakdown, placement, param-charge threading
+# ---------------------------------------------------------------------------
+
+
+def test_stage_breakdown_sanity(small_pim_cfg):
+    """`stage_breakdown` has one span per exchange stage, with sane
+    occupancy/overlap and the four-step stride set {M, 2M, ...}."""
+    n, banks = 1024, 4
+    r = ShardedNttPlan(small_pim_cfg, n, banks).simulate(baseline=False)
+    assert len(r.stage_breakdown) == 2  # log2(banks)
+    m = n // banks
+    assert {s.stride for s in r.stage_breakdown} == {m, 2 * m}
+    for sp in r.stage_breakdown:
+        assert sp.end_ns > sp.begin_ns >= 0.0
+        assert sp.span_ns > 0.0
+        assert sp.pairs == banks // 2
+        assert 1 <= sp.channels <= small_pim_cfg.num_channels
+        assert 0.0 < sp.occupancy <= 1.0
+        assert 0.0 <= sp.overlap <= 1.0
+    assert sum(sp.busy_ns for sp in r.stage_breakdown) > 0.0
+    # the serial ablation reports the same stages over a wider window
+    s = ShardedNttPlan(small_pim_cfg, n, banks).simulate(
+        baseline=False, pipelined=False)
+    assert {sp.stride for sp in s.stage_breakdown} == {m, 2 * m}
+
+
+def test_conflict_placement_partners_cross_channel():
+    """XOR-fold placement puts every stage's exchange partners on
+    distinct channels: partner sub-indices differ in one bit, so a
+    single-bit flip must change the mapped channel."""
+    from repro.pimsys.sharded import conflict_aware_flat_banks
+
+    cfg = PimConfig(num_buffers=2, num_channels=4, num_banks=4)
+    topo = DeviceTopology.from_config(cfg)
+    placed = conflict_aware_flat_banks(topo, tuple(range(16)))
+    assert sorted(placed) == list(range(16))
+    bit = 1
+    while bit < 16:
+        for b in range(16):
+            ch_b = topo.address_of(placed[b]).channel
+            ch_p = topo.address_of(placed[b ^ bit]).channel
+            assert ch_b != ch_p, (b, b ^ bit, bit)
+        bit <<= 1
+
+
+def test_conflict_placement_fallbacks():
+    """Degenerate shapes pass through; a channel-skewed pool (what a
+    scheduler gang gets when only some banks are free) still yields a
+    permutation of exactly the pool."""
+    from repro.pimsys.sharded import conflict_aware_flat_banks
+
+    one = DeviceTopology.from_config(
+        PimConfig(num_buffers=2, num_channels=1, num_banks=8))
+    assert conflict_aware_flat_banks(one, (0, 1, 2, 3)) == (0, 1, 2, 3)
+    cfg = PimConfig(num_buffers=2, num_channels=2, num_banks=4)
+    topo = DeviceTopology.from_config(cfg)
+    assert conflict_aware_flat_banks(topo, (0, 1, 2)) == (0, 1, 2)
+    skew = tuple(f for f in range(8) if topo.address_of(f).channel == 0)
+    placed = conflict_aware_flat_banks(topo, skew)
+    assert sorted(placed) == sorted(skew)
+
+
+def test_placement_identity_default_and_conflict_permutes(small_pim_cfg):
+    ident = ShardedNttPlan(small_pim_cfg, 512, 4)
+    assert ident.placement == "identity"
+    assert tuple(ident.flat_banks) == tuple(range(4))
+    conf = ShardedNttPlan(small_pim_cfg, 512, 4, placement="conflict")
+    assert sorted(conf.flat_banks) == list(range(4))
+    with pytest.raises(ValueError, match="placement"):
+        ShardedNttPlan(small_pim_cfg, 512, 4, placement="banana")
+    # placement moves commands between banks, never changes the math
+    ctx = ntt.make_context(Q, 512)
+    a = rand_poly(512, 7)
+    assert np.array_equal(ident.run_functional(a, ctx),
+                          conf.run_functional(a, ctx))
+
+
+def test_sharded_op_placement_field(small_pim_cfg):
+    from repro.pimsys import PimSession, ShardedNttOp
+
+    sess = PimSession(small_pim_cfg)
+    r = sess.run(sess.compile(ShardedNttOp(512, banks=4, placement="conflict")))
+    assert r.timing.latency_ns > 0
+
+
+def test_exchange_param_charges_pin_closed_form():
+    """The LRU walk threaded across the local->exchange boundary must
+    charge exactly the closed form the old code hardwired: exchange
+    twiddle programs are keyed per (stage, pair) and disjoint from the
+    local keys, so the first atom of a pair always misses (full load,
+    code 1) and the rest re-select (hit beats, code 2)."""
+    from repro.pimsys.engine import param_hit_beats
+
+    cfg = PimConfig(num_buffers=2, num_channels=2, num_banks=2,
+                    param_cache_entries=8)
+    plan = ShardedNttPlan(cfg, 1024, 4)  # inverse: locals seed the LRUs
+    full = cfg.param_load_cycles * cfg.dram_ns
+    hit = param_hit_beats(cfg) * cfg.dram_ns
+    charges = plan.exchange_param_charges()
+    assert len(charges) == 2 and all(len(st) == 2 for st in charges)
+    for stage in charges:
+        for first_ns, first_code, rest_ns, rest_code in stage:
+            assert (first_code, rest_code) == (1, 2)
+            assert first_ns == pytest.approx(full)
+            assert rest_ns == pytest.approx(hit)
+    off = ShardedNttPlan(cfg.with_(param_cache_entries=0), 1024, 4)
+    for stage in off.exchange_param_charges():
+        assert all(c == (None, 0, None, 0) for c in stage)
+
+
+def test_sharded_fastpath_raises_naming_sharded(small_pim_cfg):
+    """`PimSession.run(sharded_plan, backend="fastpath")` must fail with
+    a message that names sharded plans and the working backend."""
+    from repro.pimsys import PimSession, ShardedNttOp
+
+    sess = PimSession(small_pim_cfg)
+    plan = sess.compile(ShardedNttOp(512, banks=2))
+    with pytest.raises(ValueError, match="sharded") as ei:
+        sess.run(plan, backend="fastpath")
+    assert "engine" in str(ei.value)
+
+
+def test_run_service_fastpath_rejects_sharded_gangs(small_pim_cfg):
+    from repro.pimsys import ServicePolicy, ServiceRequest
+
+    reqs = [ServiceRequest(0.0, ShardedNttJob(512, banks=2))]
+    with pytest.raises(ValueError, match="sharded"):
+        RequestScheduler(small_pim_cfg).run_service(
+            reqs, policy=ServicePolicy(backend="fastpath"))

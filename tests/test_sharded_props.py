@@ -58,6 +58,31 @@ def test_sharded_roundtrip(n, banks, seed):
     assert np.array_equal(back, a)
 
 
+@given(st.sampled_from([256, 512, 1024]), st.sampled_from([2, 4, 8]),
+       st.sampled_from([1, 2]), st.booleans(), st.integers(0, 2**31))
+@settings(max_examples=10)
+def test_pipelined_exchange_never_slower_and_bit_exact(n, banks, ch, forward,
+                                                       seed):
+    """The double-buffered exchange driver is a pure schedule change:
+    across sizes, bank counts, topologies and both directions it must
+    never increase the makespan over the serial driver, and the plan it
+    times must still compute exactly the `core.ntt` reference."""
+    from repro.pimsys import PimSession, ShardedNttOp
+
+    cfg = PimConfig(num_buffers=2, num_channels=ch, num_banks=banks // ch)
+    sess = PimSession(cfg)
+    cp = sess.compile(ShardedNttOp(n, banks, forward=forward))
+    plan = cp.sharded_plan
+    fast = plan.simulate(baseline=False)
+    slow = plan.simulate(baseline=False, pipelined=False)
+    assert fast.latency_ns <= slow.latency_ns + 1e-9
+    ctx = ntt.make_context(Q, n)
+    a = rand_poly(n, seed)
+    got = sess.run(cp, a, ctx=ctx, time=False).value
+    ref = (ntt.ntt_forward_np if forward else ntt.ntt_inverse_np)(a, ctx)
+    assert np.array_equal(got, ref)
+
+
 @given(st.sampled_from([2, 4, 8]), st.integers(0, 2**31))
 @settings(max_examples=10)
 def test_sharded_linearity(banks, seed):
