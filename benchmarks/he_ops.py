@@ -1,0 +1,209 @@
+"""Beyond-paper: RNS-CKKS ciphertext ops on the PIM device (`repro.he`).
+
+The paper's row-centric NTT bank is the inner loop of RNS homomorphic
+encryption; this benchmark drives the ciphertext-level op specs
+(`RlweCtMulOp`, `KeySwitchOp`, `RescaleOp`, fused `CtMulRelinOp`)
+through `PimSession.compile` and sweeps towers x N x banks:
+
+  1. tower-parallel scaling: each op at banks = 1 .. towers — the
+     embarrassingly parallel RNS axis should hold efficiency >= 0.7 at
+     banks = towers for the compute-bound ops (the acceptance gate);
+     keyswitch shows the base-extension broadcast paying real bus
+     bursts, rescale the movement-dominated floor
+  2. op mix at banks = towers: per-op latency + the fused
+     multiply-relinearize saving vs the unfused pair
+  3. serving: Poisson ciphertext-multiply arrivals through the
+     `DeviceService` gang path (plans stay frozen; the scheduler
+     replays one primed resolver per channel pattern)
+
+`--json PATH` writes every sweep point as machine-readable JSON under
+the shared `schema_version` + metadata header; smoke.sh gates the
+fresh quick sweep against the committed `BENCH_he.json`
+(`scripts/perf_check.py`) and refreshes it — the simulator is
+deterministic, so a diff in that file IS a perf change.
+
+`--trace-out PATH` records ONE telemetry-enabled keyswitch run
+(towers = banks = 8) and exports its Chrome trace-event JSON: the
+`he` track carries one span per plan segment, including the
+`base_extend` broadcast.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.he_ops [--quick] \
+        [--json BENCH_he.json] [--trace-out he_trace.json]
+    PYTHONPATH=src python -m benchmarks.run --only he_ops
+"""
+import argparse
+import json
+
+import repro.he as he
+from repro.core.pim_config import PimConfig
+from repro.pimsys import PimSession, ServicePolicy
+
+#: quick topology: 2 channels x 4 banks = 8 reserved banks max
+QUICK_CFG = dict(num_channels=2, num_banks=4, param_cache_entries=16)
+FULL_CFG = dict(num_channels=4, num_banks=4, param_cache_entries=16)
+
+
+def _op_point(sess, op):
+    t = sess.run(sess.compile(op)).timing
+    hit = f"hit_rate={t.param_hit_rate:.2f};" if t.param_hit_rate is not None else ""
+    return t, (
+        f"speedup=x{t.speedup:.2f};eff={t.efficiency:.2f};"
+        f"single_us={t.single_ns / 1e3:.1f};{hit}"
+        f"xfer_atoms={t.xfer_atoms};hops={t.xfer_hops}"
+    )
+
+
+def _scaling_sweep(emit, cfg_kw, sizes, levels, bank_counts):
+    """Every op, banks = 1..towers: the tower->bank scaling curves."""
+    sess = PimSession(PimConfig(**cfg_kw))
+    total = sess.topo.total_banks
+    for n in sizes:
+        for big_l in levels:
+            for banks in bank_counts:
+                if banks > min(big_l, total):
+                    continue
+                for kind, op in (
+                    ("ct_mul", he.RlweCtMulOp(n=n, towers=big_l, banks=banks)),
+                    ("keyswitch", he.KeySwitchOp(n=n, towers=big_l, banks=banks)),
+                ):
+                    t, derived = _op_point(sess, op)
+                    emit(f"he/{kind}/N={n}/L={big_l}/banks={banks}",
+                         t.latency_ns / 1e3, derived)
+
+
+def _op_mix(emit, cfg_kw, sizes, levels):
+    """All four ops at banks = towers, plus the fusion saving."""
+    sess = PimSession(PimConfig(**cfg_kw))
+    total = sess.topo.total_banks
+    for n in sizes:
+        for big_l in levels:
+            banks = min(big_l, total)
+            ops = {
+                "ct_mul": he.RlweCtMulOp(n=n, towers=big_l, banks=banks),
+                "keyswitch": he.KeySwitchOp(n=n, towers=big_l, banks=banks),
+                "rescale": he.RescaleOp(n=n, towers=big_l, banks=banks),
+                "ct_mul_relin": he.CtMulRelinOp(n=n, towers=big_l, banks=banks),
+            }
+            lat = {}
+            for kind, op in ops.items():
+                t, derived = _op_point(sess, op)
+                lat[kind] = t.latency_ns
+                emit(f"he/mix/{kind}/N={n}/L={big_l}/banks={banks}",
+                     t.latency_ns / 1e3, derived)
+            unfused = lat["ct_mul"] + lat["keyswitch"]
+            emit(f"he/mix/fusion/N={n}/L={big_l}/banks={banks}", 0.0,
+                 f"fused_us={lat['ct_mul_relin'] / 1e3:.1f};"
+                 f"unfused_us={unfused / 1e3:.1f};"
+                 f"saving={1 - lat['ct_mul_relin'] / unfused:.2f}")
+
+
+def _serving_sweep(emit, cfg_kw, n, big_l, rates, jobs):
+    """Open-loop ciphertext-multiply arrivals through the gang path."""
+    sess = PimSession(PimConfig(**cfg_kw))
+    banks = min(big_l, sess.topo.total_banks)
+    plan = sess.compile(he.RlweCtMulOp(n=n, towers=big_l, banks=banks))
+    svc = sess.service(ServicePolicy())
+    for rate in rates:
+        svc.submit_poisson(plan, jobs, rate, seed=0)
+        res = svc.result()
+        p = res.latency_percentiles_us()
+        emit(f"he/serve/ct_mul/N={n}/L={big_l}/rate={rate}", p["p50"],
+             f"p95={p['p95']:.1f}us;p99={p['p99']:.1f}us;"
+             f"tput={res.throughput_jobs_per_ms:.2f}jobs_ms")
+
+
+def run(emit, quick: bool = False):
+    if quick:
+        _scaling_sweep(emit, QUICK_CFG, sizes=[256], levels=[2, 4, 8],
+                       bank_counts=[1, 2, 4, 8])
+        _op_mix(emit, QUICK_CFG, sizes=[256], levels=[2, 4, 8])
+        _serving_sweep(emit, QUICK_CFG, n=256, big_l=4,
+                       rates=[0.02], jobs=12)
+        return
+    _scaling_sweep(emit, FULL_CFG, sizes=[1024, 4096], levels=[2, 4, 8, 16],
+                   bank_counts=[1, 2, 4, 8, 16])
+    _op_mix(emit, FULL_CFG, sizes=[1024, 4096], levels=[2, 4, 8, 16])
+    _serving_sweep(emit, FULL_CFG, n=1024, big_l=8,
+                   rates=[0.005, 0.02], jobs=32)
+
+
+def record_trace(path: str, quick: bool = False) -> dict:
+    """ONE telemetry-enabled keyswitch (towers = banks), exported as a
+    Chrome trace-event document whose `he` track spans every plan
+    segment — base-extension broadcast included."""
+    from repro.pimsys import validate_chrome_trace
+
+    n, big_l = (256, 4) if quick else (1024, 8)
+    cfg = PimConfig(num_channels=4, num_banks=2, param_cache_entries=16,
+                    telemetry=True)
+    sess = PimSession(cfg)
+    r = sess.run(sess.compile(he.KeySwitchOp(n=n, towers=big_l)))
+    tel = r.telemetry
+    assert tel is not None, "telemetry=True run must carry a TelemetryHandle"
+    errors = validate_chrome_trace(tel.chrome_trace())
+    if errors:
+        raise SystemExit("trace failed schema validation: " + "; ".join(errors))
+    phases = sorted({p[1] for p in tel.tracer.phases})
+    if "base_extend" not in phases:
+        raise SystemExit("keyswitch trace is missing the base_extend span")
+    tel.dump(path)
+    return {
+        "path": path,
+        "events": len(tel.chrome_trace()["traceEvents"]),
+        "phases": phases,
+        "n": n,
+        "towers": big_l,
+    }
+
+
+def main():
+    from benchmarks.multibank import collecting_emit
+    from benchmarks.run import emit
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for smoke tests (~seconds)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write every sweep point as JSON "
+                         "(e.g. BENCH_he.json)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="instead of sweeping: record one telemetry-"
+                         "enabled keyswitch run and export its Chrome "
+                         "trace-event JSON")
+    args = ap.parse_args()
+
+    if args.trace_out:
+        info = record_trace(args.trace_out, quick=args.quick)
+        print(f"# wrote {info['events']} trace events "
+              f"(phases: {', '.join(info['phases'])}, N={info['n']}, "
+              f"L={info['towers']}) to {info['path']}")
+        return
+
+    records: list = []
+    sink = collecting_emit(emit, records) if args.json else emit
+
+    print("name,us_per_call,derived")
+    run(sink, quick=args.quick)
+
+    if args.json:
+        from benchmarks.run import SCHEMA_VERSION, bench_meta
+
+        with open(args.json, "w") as f:
+            json.dump(
+                {
+                    "benchmark": "he_ops",
+                    "schema_version": SCHEMA_VERSION,
+                    "meta": bench_meta(
+                        cfg=PimConfig(**(QUICK_CFG if args.quick else FULL_CFG)),
+                        seeds={"serve": 0}),
+                    "quick": args.quick,
+                    "points": records,
+                },
+                f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(records)} sweep points to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

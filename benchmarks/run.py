@@ -41,7 +41,7 @@ def bench_meta(cfg: object = None, seeds: object = None) -> dict:
     }
 
 
-BENCHES = ("table2", "fig7", "fig8", "table3", "tpu_ntt", "multibank")
+BENCHES = ("table2", "fig7", "fig8", "table3", "tpu_ntt", "multibank", "he_ops")
 
 
 def main() -> None:
@@ -76,6 +76,10 @@ def main() -> None:
         from benchmarks import multibank
 
         multibank.run(emit)
+    if "he_ops" in only:
+        from benchmarks import he_ops
+
+        he_ops.run(emit)
 
 
 if __name__ == "__main__":

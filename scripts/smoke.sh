@@ -32,6 +32,22 @@ python scripts/perf_check.py BENCH_multibank.json.new BENCH_multibank.json \
     --tol 0.10
 mv BENCH_multibank.json.new BENCH_multibank.json
 
+echo "== smoke: HE ciphertext-op sweep + perf gate (${BENCH_TIMEOUT}s budget) =="
+# RNS-CKKS ops (repro.he) through the session gang path: differential
+# tests first (bit-exact vs the big-int CRT oracles), then the quick
+# towers x N x banks sweep gated against the committed baseline —
+# the eff columns (>= 0.7 at banks = towers for ct_mul) gate absolutely
+# via --eff-tol, and the keyswitch telemetry trace must span base_extend
+timeout "${TEST_TIMEOUT}" python -m pytest -q tests/test_he.py tests/test_he_props.py
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.he_ops --quick \
+    --json BENCH_he.json.new
+python scripts/perf_check.py BENCH_he.json.new BENCH_he.json --tol 0.10
+mv BENCH_he.json.new BENCH_he.json
+mkdir -p artifacts
+timeout "${BENCH_TIMEOUT}" python -m benchmarks.he_ops --quick \
+    --trace-out artifacts/trace_he.json
+python scripts/validate_trace.py artifacts/trace_he.json
+
 echo "== smoke: NttBackend differential + TPU lane gate (${BENCH_TIMEOUT}s budget) =="
 # the three-lane {reference, pim-sim, pallas} differential must hold
 # bit-exactly (tests/test_backend.py runs even without hypothesis/jax),

@@ -1,0 +1,96 @@
+"""`repro.he` — RNS-CKKS ciphertext ops on the PIM device (beyond the paper).
+
+The paper's NTT-PIM bank is the inner loop of RNS homomorphic
+encryption: every ciphertext op is a bundle of independent per-modulus
+negacyclic NTTs and pointwise passes — one *residue tower* per
+modulus, and towers are the natural bank-parallel axis.  This package
+opens that workload:
+
+  * `rns` — the math layer: `RnsBasis` (chain of NTT-friendly moduli,
+    each with its own `ntt.make_context`), CRT encode/decode, and
+    exact numpy references for ciphertext multiply, gadget keyswitch
+    (with base extension), and rescale — plus big-integer oracles the
+    differential tests check against.
+  * `ops` — the device layer: `RlweCtMulOp` / `KeySwitchOp` /
+    `RescaleOp` / `CtMulRelinOp` specs that register with
+    `PimSession.compile` through the op-handler registry and lower
+    each tower onto its own reserved bank (gang issue through
+    `DeviceEngine`, base-extension modeled as real bus bursts,
+    per-tower modulus-salted parameter-cache residency).
+
+Importing `repro.he` is enough to enable the ops:
+
+    import repro.he as he
+    from repro.pimsys import PimSession
+
+    sess = PimSession(cfg)
+    plan = sess.compile(he.RlweCtMulOp(n=4096, towers=4))
+    basis = he.basis_for(plan.op)
+    r = sess.run(plan, he.random_ct(basis, 1), he.random_ct(basis, 2))
+    r.timing.efficiency      # tower-parallel efficiency vs one bank
+"""
+from repro.he.ops import (
+    HE_OPS,
+    CtMulRelinOp,
+    HeOpHandler,
+    HePlan,
+    HeTimingResult,
+    KeySwitchOp,
+    RescaleOp,
+    RlweCtMulOp,
+    basis_for,
+)
+from repro.he.rns import (
+    KeySwitchKey,
+    RnsBasis,
+    ct_mul,
+    ct_mul_reference,
+    ct_mul_relin,
+    decrypt,
+    keyswitch,
+    keyswitch_reference,
+    make_basis,
+    make_keyswitch_key,
+    make_secret,
+    ntt_towers,
+    poly_mul_towers,
+    random_ct,
+    random_poly,
+    relin_key,
+    relinearize,
+    rescale,
+    rescale_reference,
+    rns_primes,
+)
+
+__all__ = [
+    "HE_OPS",
+    "CtMulRelinOp",
+    "HeOpHandler",
+    "HePlan",
+    "HeTimingResult",
+    "KeySwitchKey",
+    "KeySwitchOp",
+    "RescaleOp",
+    "RlweCtMulOp",
+    "RnsBasis",
+    "basis_for",
+    "ct_mul",
+    "ct_mul_reference",
+    "ct_mul_relin",
+    "decrypt",
+    "keyswitch",
+    "keyswitch_reference",
+    "make_basis",
+    "make_keyswitch_key",
+    "make_secret",
+    "ntt_towers",
+    "poly_mul_towers",
+    "random_ct",
+    "random_poly",
+    "relin_key",
+    "relinearize",
+    "rescale",
+    "rescale_reference",
+    "rns_primes",
+]

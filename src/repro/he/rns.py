@@ -1,0 +1,429 @@
+"""RNS-CKKS arithmetic layer: residue towers, CRT, keyswitch, rescale.
+
+The paper's motivating application is FHE, where a ciphertext is a pair
+(or triple) of degree-n polynomials under an RNS modulus Q = q_0 ... q_{L-1}
+of NTT-friendly primes: every polynomial is stored as L independent
+*residue towers* (rows of `np.uint32`, shape `[L, n]`), and every
+tower's arithmetic is an ordinary negacyclic NTT/polymul modulo its own
+prime — exactly the workload one NTT-PIM bank serves.  This module is
+the functional half of `repro.he`:
+
+  * `RnsBasis` — a chain of distinct NTT-friendly moduli (q = 1 mod 2n,
+    descending 31-bit primes) with one `ntt.make_context` per tower,
+    CRT `encode`/`decode` between big-int coefficient vectors and the
+    tower matrix, and the gadget of CRT idempotents used for digit
+    decomposition.
+  * production tower ops — `ct_mul`, `keyswitch`, `relinearize`,
+    `ct_mul_relin`, `rescale`: vectorized per-tower numpy NTT math,
+    bit-exact against the big-int references below (per-tower equality
+    follows from CRT: schoolbook mod Q reduced mod q_i equals the
+    tower-i NTT convolution).
+  * big-int references — `ct_mul_reference`, `keyswitch_reference`,
+    `rescale_reference`, `decrypt`: O(n^2) schoolbook over python ints
+    mod Q, the oracle the differential tests pin every op against.
+
+Keyswitching uses the exact RNS gadget: digit j of a polynomial is its
+tower-j residue lifted to [0, q_j), the gadget element g_j is the CRT
+idempotent (Q/q_j) * [(Q/q_j)^{-1}]_{q_j} (g_j = 1 mod q_j, 0 mod q_i),
+so sum_j D_j g_j = c exactly mod Q, and keys are generated with zero
+noise — keyswitch output is therefore bit-exact, not approximate, which
+is what makes the device path differentially testable.  Rescale is the
+exact mod-down c' = (c - [c]_{q_last}) / q_last on the shortened basis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core import modmath as mm
+from repro.core import ntt
+
+
+# --------------------------------------------------------------------------
+# Basis
+# --------------------------------------------------------------------------
+
+
+def rns_primes(n: int, towers: int, bits: int = 31) -> tuple[int, ...]:
+    """`towers` distinct primes q = 1 (mod 2n), descending from 2**bits."""
+    if towers < 1:
+        raise ValueError("towers must be >= 1")
+    two_n = 2 * n
+    out: list[int] = []
+    p = ((1 << bits) - 2) // two_n * two_n + 1
+    while len(out) < towers and p > two_n:
+        if mm.is_prime(p):
+            out.append(p)
+        p -= two_n
+    if len(out) < towers:
+        raise ValueError(
+            f"only {len(out)} NTT-friendly {bits}-bit primes exist for n={n}")
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RnsBasis:
+    """A chain of NTT-friendly moduli with per-tower twiddle contexts.
+
+    Compared by identity (like `NttContext`): `make_basis` memoizes, so
+    equal parameters return the same object and plan caches stay keyed
+    by the hashable `(n, moduli)` op fields, never by the basis itself.
+    """
+
+    n: int
+    moduli: tuple[int, ...]
+    contexts: tuple[ntt.NttContext, ...] = dataclasses.field(repr=False)
+
+    @property
+    def towers(self) -> int:
+        return len(self.moduli)
+
+    @functools.cached_property
+    def modulus(self) -> int:
+        """Q = prod(q_i), a python big int."""
+        q = 1
+        for m in self.moduli:
+            q *= m
+        return q
+
+    @functools.cached_property
+    def _crt(self) -> tuple[tuple[int, ...], tuple[int, ...]]:
+        """(Q/q_i, [(Q/q_i)^{-1}]_{q_i}) per tower."""
+        hats = tuple(self.modulus // q for q in self.moduli)
+        invs = tuple(mm.inv_mod(h % q, q) for h, q in zip(hats, self.moduli))
+        return hats, invs
+
+    @functools.cached_property
+    def gadget(self) -> tuple[int, ...]:
+        """CRT idempotents g_j mod Q: g_j = 1 mod q_j, 0 mod q_{i!=j}."""
+        hats, invs = self._crt
+        return tuple(h * v % self.modulus for h, v in zip(hats, invs))
+
+    def encode(self, coeffs) -> np.ndarray:
+        """Big-int coefficient vector -> residue matrix `[towers, n]`."""
+        if len(coeffs) != self.n:
+            raise ValueError(f"expected {self.n} coefficients, got {len(coeffs)}")
+        ints = [int(c) for c in coeffs]
+        out = np.empty((self.towers, self.n), np.uint32)
+        for i, q in enumerate(self.moduli):
+            out[i] = np.array([c % q for c in ints], np.uint32)
+        return out
+
+    def decode(self, res: np.ndarray) -> list[int]:
+        """Residue matrix `[towers, n]` -> coefficients in [0, Q)."""
+        res = np.asarray(res)
+        if res.shape != (self.towers, self.n):
+            raise ValueError(f"expected shape {(self.towers, self.n)}, "
+                             f"got {res.shape}")
+        big_q = self.modulus
+        out = [0] * self.n
+        for i, g in enumerate(self.gadget):
+            row = res[i]
+            for k in range(self.n):
+                out[k] = (out[k] + int(row[k]) * g) % big_q
+        return out
+
+    def base_extend(self, res: np.ndarray) -> np.ndarray:
+        """Digit-decompose and extend: `[towers, n]` -> `[towers, towers, n]`.
+
+        Digit j is the tower-j residue lifted to the integer range
+        [0, q_j); entry `[j, i]` is that lift reduced mod q_i (exact —
+        the lift is already a full integer, no approximate floating
+        base conversion).  On the device this is the keyswitch
+        broadcast: digit j leaves tower j's bank for every other bank.
+        """
+        res = np.asarray(res, np.uint64)
+        out = np.empty((self.towers, self.towers, self.n), np.uint32)
+        for j in range(self.towers):
+            lift = res[j]
+            for i, qi in enumerate(self.moduli):
+                out[j, i] = (lift % qi).astype(np.uint32)
+        return out
+
+    def drop_last(self) -> "RnsBasis":
+        """The rescale target basis (one fewer tower), memoized."""
+        if self.towers < 2:
+            raise ValueError("cannot drop the last remaining tower")
+        return make_basis(self.n, self.towers - 1, moduli=self.moduli[:-1])
+
+
+def make_basis(n: int, towers: int,
+               moduli: tuple[int, ...] | None = None) -> RnsBasis:
+    """Memoized basis factory (shared twiddle contexts across sessions)."""
+    if moduli is None:
+        moduli = rns_primes(n, towers)
+    else:
+        moduli = tuple(int(q) for q in moduli)
+        if len(moduli) != towers:
+            raise ValueError(f"{towers} towers but {len(moduli)} moduli")
+        if len(set(moduli)) != len(moduli):
+            raise ValueError("moduli must be distinct")
+    return _cached_basis(n, moduli)
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_basis(n: int, moduli: tuple[int, ...]) -> RnsBasis:
+    contexts = tuple(ntt.make_context(q, n) for q in moduli)
+    return RnsBasis(n=n, moduli=moduli, contexts=contexts)
+
+
+# --------------------------------------------------------------------------
+# Per-tower vector math (the production path the device plans mirror)
+# --------------------------------------------------------------------------
+
+
+def ntt_towers(basis: RnsBasis, x: np.ndarray, forward: bool = True) -> np.ndarray:
+    """Per-tower (inverse) NTT over the trailing two axes `[..., L, n]`.
+
+    `ntt.ntt_inverse_np` includes the 1/N scaling, matching the device
+    plan's explicit `scale` pass after each inverse phase.
+    """
+    x = np.asarray(x, np.uint32)
+    out = np.empty_like(x)
+    fn = ntt.ntt_forward_np if forward else ntt.ntt_inverse_np
+    for i, ctx in enumerate(basis.contexts):
+        out[..., i, :] = fn(x[..., i, :], ctx)
+    return out
+
+
+def _mul(basis: RnsBasis, x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    out = np.empty(np.broadcast_shapes(x.shape, y.shape), np.uint32)
+    for i, q in enumerate(basis.moduli):
+        out[..., i, :] = mm.np_mulmod(x[..., i, :], y[..., i, :], q)
+    return out
+
+
+def _add(basis: RnsBasis, x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    out = np.empty(np.broadcast_shapes(x.shape, y.shape), np.uint32)
+    for i, q in enumerate(basis.moduli):
+        out[..., i, :] = mm.np_addmod(x[..., i, :], y[..., i, :], q)
+    return out
+
+
+def random_poly(basis: RnsBasis, seed: int) -> np.ndarray:
+    """A uniformly random residue matrix `[towers, n]` (independent
+    towers — i.e. a uniform element of R_Q by CRT)."""
+    rng = np.random.default_rng(seed)
+    out = np.empty((basis.towers, basis.n), np.uint32)
+    for i, q in enumerate(basis.moduli):
+        out[i] = rng.integers(0, q, basis.n, dtype=np.uint64).astype(np.uint32)
+    return out
+
+
+def random_ct(basis: RnsBasis, seed: int, k: int = 2) -> np.ndarray:
+    """A random `k`-component ciphertext `[k, towers, n]`."""
+    return np.stack([random_poly(basis, seed * 1000 + c) for c in range(k)])
+
+
+def make_secret(basis: RnsBasis, seed: int = 0) -> np.ndarray:
+    """A ternary secret s in {-1, 0, 1}^n, encoded per tower."""
+    rng = np.random.default_rng(seed)
+    s = rng.integers(-1, 2, basis.n)
+    out = np.empty((basis.towers, basis.n), np.uint32)
+    for i, q in enumerate(basis.moduli):
+        out[i] = np.mod(s, q).astype(np.uint32)
+    return out
+
+
+def poly_mul_towers(basis: RnsBasis, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Negacyclic product per tower (NTT domain round trip)."""
+    return ntt_towers(basis, _mul(basis, ntt_towers(basis, a),
+                                  ntt_towers(basis, b)), forward=False)
+
+
+def ct_mul(basis: RnsBasis, ct_a: np.ndarray, ct_b: np.ndarray) -> np.ndarray:
+    """Tensor two ciphertexts: `[2, L, n]` x `[2, L, n]` -> `[3, L, n]`.
+
+    (a0 + a1 s)(b0 + b1 s) = d0 + d1 s + d2 s^2 with d0 = a0 b0,
+    d1 = a0 b1 + a1 b0, d2 = a1 b1 — 4 forward NTTs, 4 pointwise
+    products + 1 add, 3 inverse NTTs per tower (the device plan's
+    fwd/pointwise/inv phase counts come from exactly this).
+    """
+    a = ntt_towers(basis, np.asarray(ct_a, np.uint32))
+    b = ntt_towers(basis, np.asarray(ct_b, np.uint32))
+    d0 = _mul(basis, a[0], b[0])
+    d1 = _add(basis, _mul(basis, a[0], b[1]), _mul(basis, a[1], b[0]))
+    d2 = _mul(basis, a[1], b[1])
+    return ntt_towers(basis, np.stack([d0, d1, d2]), forward=False)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class KeySwitchKey:
+    """Gadget keyswitch key from `s_from` to `s_to`, zero noise.
+
+    `b[j] = -a[j] s_to + g_j s_from` with uniform `a[j]`, per tower:
+    since g_j is the CRT idempotent, tower i of b[j] is
+    `-a[j] s_to + (s_from if i == j else 0)`.  Both halves are kept in
+    the coefficient domain (`b`, `a`, shape `[L, L, n]`) and the NTT
+    domain (`b_hat`, `a_hat`) — the device holds the NTT-domain copy
+    resident so the inner products are pointwise.
+    """
+
+    basis: RnsBasis
+    b: np.ndarray
+    a: np.ndarray
+
+    @functools.cached_property
+    def b_hat(self) -> np.ndarray:
+        return ntt_towers(self.basis, self.b)
+
+    @functools.cached_property
+    def a_hat(self) -> np.ndarray:
+        return ntt_towers(self.basis, self.a)
+
+
+def make_keyswitch_key(basis: RnsBasis, s_from: np.ndarray, s_to: np.ndarray,
+                       seed: int = 0) -> KeySwitchKey:
+    big_l = basis.towers
+    a = np.stack([random_poly(basis, seed * 7919 + j) for j in range(big_l)])
+    b = np.empty_like(a)
+    for j in range(big_l):
+        prod = poly_mul_towers(basis, a[j], s_to)
+        for i, q in enumerate(basis.moduli):
+            row = mm.np_submod(np.zeros(basis.n, np.uint32), prod[i], q)
+            if i == j:
+                row = mm.np_addmod(row, s_from[i], q)
+            b[j, i] = row
+    return KeySwitchKey(basis=basis, b=b, a=a)
+
+
+def relin_key(basis: RnsBasis, s: np.ndarray, seed: int = 0) -> KeySwitchKey:
+    """Relinearization key: keyswitch from s^2 to s."""
+    return make_keyswitch_key(basis, poly_mul_towers(basis, s, s), s, seed=seed)
+
+
+def keyswitch(basis: RnsBasis, c2: np.ndarray, ksk: KeySwitchKey) -> np.ndarray:
+    """Switch one polynomial to the key pair: `[L, n]` -> `[2, L, n]`.
+
+    Digits base-extend (the device's broadcast phase), forward-NTT per
+    tower (L transforms each), pointwise inner products against the
+    resident NTT-domain key, one accumulator pair, two inverse NTTs.
+    Exact: c0' + c1' s_to = c2 * s_from mod Q.
+    """
+    digits = basis.base_extend(np.asarray(c2, np.uint32))   # [L, L, n]
+    dhat = ntt_towers(basis, digits)
+    acc0 = _mul(basis, dhat[0], ksk.b_hat[0])
+    acc1 = _mul(basis, dhat[0], ksk.a_hat[0])
+    for j in range(1, basis.towers):
+        acc0 = _add(basis, acc0, _mul(basis, dhat[j], ksk.b_hat[j]))
+        acc1 = _add(basis, acc1, _mul(basis, dhat[j], ksk.a_hat[j]))
+    return ntt_towers(basis, np.stack([acc0, acc1]), forward=False)
+
+
+def relinearize(basis: RnsBasis, d: np.ndarray, ksk: KeySwitchKey) -> np.ndarray:
+    """Degree-2 -> degree-1: `[3, L, n]` -> `[2, L, n]`."""
+    ks = keyswitch(basis, d[2], ksk)
+    return np.stack([_add(basis, d[0], ks[0]), _add(basis, d[1], ks[1])])
+
+
+def ct_mul_relin(basis: RnsBasis, ct_a: np.ndarray, ct_b: np.ndarray,
+                 ksk: KeySwitchKey) -> np.ndarray:
+    """Fused multiply + relinearize: `[2, L, n]` x 2 -> `[2, L, n]`.
+
+    Functionally `relinearize(ct_mul(...))`; the fused device plan
+    differs only in *timing* (d0/d1 and the keyswitch accumulators stay
+    in the NTT domain, saving 3 inverse NTTs per tower), so this one
+    definition is the functional value of both spellings.
+    """
+    return relinearize(basis, ct_mul(basis, ct_a, ct_b), ksk)
+
+
+def rescale(basis: RnsBasis, ct: np.ndarray) -> np.ndarray:
+    """Exact mod-down by q_last: `[k, L, n]` -> `[k, L-1, n]`.
+
+    c'_i = (c_i - [c]_{q_last}) * q_last^{-1} mod q_i — the integer
+    c - [c]_{q_last} is divisible by q_last, so this is the exact value
+    (c - [c]_{q_last}) / q_last on the shortened basis.
+    """
+    ct = np.asarray(ct, np.uint32)
+    if ct.shape[-2] != basis.towers:
+        raise ValueError(f"ciphertext has {ct.shape[-2]} towers, "
+                         f"basis {basis.towers}")
+    q_last = basis.moduli[-1]
+    last = ct[..., -1, :].astype(np.uint64)
+    out = np.empty(ct.shape[:-2] + (basis.towers - 1, basis.n), np.uint32)
+    for i, q in enumerate(basis.moduli[:-1]):
+        inv = np.uint32(mm.inv_mod(q_last % q, q))
+        delta = mm.np_submod(ct[..., i, :], (last % q).astype(np.uint32), q)
+        out[..., i, :] = mm.np_mulmod(delta, inv, q)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Big-int CRT references (the differential oracle)
+# --------------------------------------------------------------------------
+
+
+def _poly_mul_int(a: list[int], b: list[int], n: int, big_q: int) -> list[int]:
+    """Negacyclic schoolbook over python ints mod Q (x^n = -1)."""
+    out = [0] * n
+    for i, ai in enumerate(a):
+        if ai == 0:
+            continue
+        for j, bj in enumerate(b):
+            k = i + j
+            if k < n:
+                out[k] += ai * bj
+            else:
+                out[k - n] -= ai * bj
+    return [x % big_q for x in out]
+
+
+def ct_mul_reference(basis: RnsBasis, ct_a: np.ndarray,
+                     ct_b: np.ndarray) -> np.ndarray:
+    """Big-int oracle for `ct_mul` (O(n^2) schoolbook mod Q)."""
+    big_q, n = basis.modulus, basis.n
+    a0, a1 = (basis.decode(c) for c in np.asarray(ct_a))
+    b0, b1 = (basis.decode(c) for c in np.asarray(ct_b))
+    d0 = _poly_mul_int(a0, b0, n, big_q)
+    d1 = [(x + y) % big_q for x, y in zip(_poly_mul_int(a0, b1, n, big_q),
+                                          _poly_mul_int(a1, b0, n, big_q))]
+    d2 = _poly_mul_int(a1, b1, n, big_q)
+    return np.stack([basis.encode(d) for d in (d0, d1, d2)])
+
+
+def keyswitch_reference(basis: RnsBasis, c2: np.ndarray,
+                        ksk: KeySwitchKey) -> np.ndarray:
+    """Big-int oracle for `keyswitch`: sum_j D_j * (b_j, a_j) mod Q."""
+    big_q, n = basis.modulus, basis.n
+    res = np.asarray(c2)
+    c0 = [0] * n
+    c1 = [0] * n
+    for j in range(basis.towers):
+        digit = [int(v) for v in res[j]]  # the lift, already in [0, q_j)
+        pb = _poly_mul_int(digit, basis.decode(ksk.b[j]), n, big_q)
+        pa = _poly_mul_int(digit, basis.decode(ksk.a[j]), n, big_q)
+        c0 = [(x + y) % big_q for x, y in zip(c0, pb)]
+        c1 = [(x + y) % big_q for x, y in zip(c1, pa)]
+    return np.stack([basis.encode(c0), basis.encode(c1)])
+
+
+def rescale_reference(basis: RnsBasis, ct: np.ndarray) -> np.ndarray:
+    """Big-int oracle for `rescale`: (v - [v]_{q_last}) / q_last mod Q'."""
+    ct = np.asarray(ct)
+    sub = basis.drop_last()
+    q_last = basis.moduli[-1]
+    out = []
+    for comp in ct:
+        v = basis.decode(comp)
+        scaled = [((x - int(r)) // q_last) % sub.modulus
+                  for x, r in zip(v, comp[-1])]
+        out.append(sub.encode(scaled))
+    return np.stack(out)
+
+
+def decrypt(basis: RnsBasis, ct: np.ndarray, s: np.ndarray) -> list[int]:
+    """c0 + c1 s (+ c2 s^2) mod Q over python ints — the test probe that
+    proves keyswitch/relinearize preserve the encrypted value."""
+    big_q, n = basis.modulus, basis.n
+    ct = np.asarray(ct)
+    s_int = basis.decode(s)
+    out = basis.decode(ct[0])
+    pw = s_int
+    for comp in ct[1:]:
+        term = _poly_mul_int(basis.decode(comp), pw, n, big_q)
+        out = [(x + y) % big_q for x, y in zip(out, term)]
+        pw = _poly_mul_int(pw, s_int, n, big_q)
+    return out

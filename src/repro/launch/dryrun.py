@@ -197,6 +197,14 @@ def _depth_variant(cfg, n_reps: int):
     return dataclasses.replace(cfg, **over)
 
 
+def cost_dict(cost) -> dict:
+    """Normalize Compiled.cost_analysis(): older jax returns a one-element
+    list of dicts (per device), newer jax the dict itself."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def extrapolated_costs(cfg, shape, mesh) -> dict:
     samples = []
     for n in (1, 2):
@@ -204,7 +212,7 @@ def extrapolated_costs(cfg, shape, mesh) -> dict:
         jitted, args = build_lowerable(cfg_n, shape, mesh)
         with mesh:
             compiled = jitted.lower(*args).compile()
-        cost = compiled.cost_analysis()
+        cost = cost_dict(compiled.cost_analysis())
         coll = parse_collectives(compiled.as_text())
         samples.append(
             dict(
@@ -261,7 +269,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, report_dir: str = REPO
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = cost_dict(compiled.cost_analysis())
         hlo = compiled.as_text()
         coll = parse_collectives(hlo)
         record.update(

@@ -65,6 +65,7 @@ from repro.pimsys.scheduler import (
     QOS_CLASSES,
     STATUS_COMPLETED,
     STATUS_REJECTED,
+    GangJob,
     NttJob,
     PolymulJob,
     RequestScheduler,
@@ -84,11 +85,14 @@ from repro.pimsys.session import (
     CompiledPlan,
     InverseNttOp,
     NttOp,
+    OpHandler,
     PimSession,
     PolymulOp,
     RunResult,
     ShardedNttOp,
     TraceHandle,
+    op_handler,
+    register_op_handler,
     twiddle_param_stream,
 )
 from repro.pimsys.sharded import (
@@ -123,11 +127,13 @@ __all__ = [
     "ExchangePair",
     "ExchangeStage",
     "FastpathMismatch",
+    "GangJob",
     "GangResult",
     "InverseNttOp",
     "LoweredPlan",
     "NttJob",
     "NttOp",
+    "OpHandler",
     "PimFuture",
     "PimSession",
     "PolymulJob",
@@ -161,7 +167,9 @@ __all__ = [
     "loads_trace",
     "lower_commands",
     "lower_plan",
+    "op_handler",
     "param_beat_trace",
+    "register_op_handler",
     "replay_gang",
     "replay_trace",
     "verify_stream",

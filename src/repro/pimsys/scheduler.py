@@ -115,7 +115,30 @@ class ShardedNttJob:
     forward: bool = False
 
 
-Job = NttJob | PolymulJob | ShardedNttJob
+@dataclasses.dataclass(frozen=True)
+class GangJob:
+    """A generic gang-scheduled job: `banks` banks reserved at once.
+
+    The scheduler knows nothing about what runs inside the reservation —
+    the owning compiled plan primes a *resolver* (`prime_gang`) that,
+    given the reserved flat banks, returns the gang's latency and stats
+    in the same shape `ShardedNttJob` uses.  `op` is the hashable op
+    spec the plan compiled (the cache identity); `rows` the per-bank
+    working-set bound validated against `rows_per_bank`.  The
+    reservation approximation of `ShardedNttJob` applies: the gang's
+    bus traffic runs on a dedicated sub-device timeline.  HE ciphertext
+    ops (`repro.he`) dispatch through this.
+    """
+
+    op: object
+    banks: int = 1
+    rows: int = 1
+
+
+Job = NttJob | PolymulJob | ShardedNttJob | GangJob
+
+#: jobs that gang-reserve `job.banks` banks per dispatch
+GANG_JOBS = (ShardedNttJob, GangJob)
 
 
 def job_commands(cfg: PimConfig, job: Job) -> list[Command]:
@@ -127,6 +150,10 @@ def job_commands(cfg: PimConfig, job: Job) -> list[Command]:
         raise TypeError(
             "ShardedNttJob spans banks and has no single-bank command "
             "stream; use ShardedNttPlan(...).local_streams() instead")
+    if isinstance(job, GangJob):
+        raise TypeError(
+            f"{job} spans banks and has no single-bank command stream; "
+            "gang jobs resolve through their primed resolver")
     raise TypeError(job)
 
 
@@ -134,6 +161,8 @@ def job_rows(cfg: PimConfig, job: Job) -> int:
     """Rows of bank storage the job's working set occupies (per bank)."""
     if isinstance(job, ShardedNttJob):
         return max(1, (job.n // job.banks) // cfg.row_words)
+    if isinstance(job, GangJob):
+        return job.rows
     rows = max(1, job.n // cfg.row_words)
     return rows if isinstance(job, NttJob) else 2 * rows  # polymul holds a AND b
 
@@ -522,6 +551,11 @@ class RequestScheduler:
         # Values are (latency_ns, per-shard counters, per-channel bus
         # busy ns, device counters) — see _sharded_latency.
         self._sharded_cache: dict[tuple, tuple[float, list, dict, dict]] = {}
+        # GangJob -> resolver(flats) -> (latency_ns, per-bank counters,
+        # per-channel bus busy, device counters); resolved results cache
+        # by channel pattern exactly like the sharded cache
+        self._gang_resolvers: dict[GangJob, object] = {}
+        self._gang_cache: dict[tuple, tuple[float, list, dict, dict]] = {}
         # (job, gang size) -> _FastProfile for ServicePolicy(backend=
         # "fastpath"); _fast_verified holds the profiles already proven
         # against the interpreted oracle (verify_every sampling).
@@ -553,9 +587,10 @@ class RequestScheduler:
         canonical one (`job_commands` equivalent) — the scheduler trusts
         the session's compiler for that.
         """
-        if isinstance(job, ShardedNttJob):
+        if isinstance(job, GANG_JOBS):
             raise TypeError("gang jobs have no single-bank stream to prime; "
-                            "the sharded plan cache handles them")
+                            "use prime_gang (the sharded plan cache handles "
+                            "ShardedNttJob)")
         if job_rows(self.cfg, job) > self.cfg.rows_per_bank:
             raise ValueError(f"{job} does not fit in one bank")
         if param_trace is None and self.cfg.param_cache_entries:
@@ -611,6 +646,40 @@ class RequestScheduler:
             dev = {"xfer_atoms": r.xfer_atoms, "xfer_hops": r.xfer_hops}
             hit = self._sharded_cache[key] = (
                 r.latency_ns, shard_counters, bus_busy, dev)
+        return hit
+
+    # -- generic gang jobs (repro.he and other extension ops) ----------------
+    def prime_gang(self, job: GangJob, resolver) -> None:
+        """Register the resolver a `GangJob` dispatches through.
+
+        `resolver(flats)` simulates the gang on the reserved flat banks
+        (on its own idle sub-device, the gang reservation model) and
+        returns `(latency_ns, per_bank_counters, bus_busy_by_channel,
+        device_counters)` — the exact shape `_sharded_latency` returns,
+        so the dispatch loops and stats merging treat both identically.
+        Results are cached by the placement's channel pattern, so the
+        resolver runs once per distinct pattern no matter how many
+        requests replay the plan.  Compiled plans prime this through
+        `CompiledPlan.prime_scheduler`.
+        """
+        if not isinstance(job, GangJob):
+            raise TypeError(f"prime_gang takes a GangJob, got {job!r}")
+        self._gang_resolvers[job] = resolver
+
+    def _gang_latency(self, job, flats: Sequence[int]):
+        """Latency + stats of any gang job on its reserved banks."""
+        if isinstance(job, ShardedNttJob):
+            return self._sharded_latency(job, flats)
+        key = (job, tuple(self.topo.channel_of(f) for f in flats))
+        hit = self._gang_cache.get(key)
+        if hit is None:
+            resolver = self._gang_resolvers.get(job)
+            if resolver is None:
+                raise TypeError(
+                    f"{job} has no primed resolver; submit gang plans "
+                    "through the service (CompiledPlan.prime_scheduler) "
+                    "or call prime_gang first")
+            hit = self._gang_cache[key] = resolver(list(flats))
         return hit
 
     def _batch_traces(self, job: Job) -> tuple[tuple | None, tuple | None]:
@@ -682,17 +751,26 @@ class RequestScheduler:
                       pipelined=self.pipelined)
         self._fast_verified.add(key)
 
-    def _validate_gang(self, job: ShardedNttJob) -> None:
-        """Fail fast on an unsatisfiable gang spec — the plan constructor
-        holds the single copy of the rules (power-of-two banks and n,
-        shard >= one atom, row fit, topology fit, buffer count)."""
+    def _validate_gang(self, job) -> None:
+        """Fail fast on an unsatisfiable gang spec — for sharded NTTs the
+        plan constructor holds the single copy of the rules (power-of-two
+        banks and n, shard >= one atom, row fit, topology fit, buffer
+        count); a generic `GangJob` checks its declared bank/row needs."""
+        if isinstance(job, GangJob):
+            if not 1 <= job.banks <= self.topo.total_banks:
+                raise ValueError(
+                    f"{job} needs {job.banks} banks; topology has "
+                    f"{self.topo.total_banks}")
+            if job.rows > self.cfg.rows_per_bank:
+                raise ValueError(f"{job} does not fit in one bank")
+            return
         from repro.pimsys.sharded import ShardedNttPlan
 
         ShardedNttPlan(self.cfg, job.n, job.banks, forward=job.forward,
                        topo=self.topo)
 
     def _run(self, arrivals: list[tuple[float, Job]]) -> SchedulerResult:
-        for job in {j for _, j in arrivals if isinstance(j, ShardedNttJob)}:
+        for job in {j for _, j in arrivals if isinstance(j, GANG_JOBS)}:
             self._validate_gang(job)
         tracer = Tracer() if self.cfg.telemetry else None
         device = Device(self.cfg, self.topo, policy=self.policy,
@@ -720,7 +798,7 @@ class RequestScheduler:
             heapq.heappush(free, (ev.done, flat))
 
         def need(job: Job) -> int:
-            return job.banks if isinstance(job, ShardedNttJob) else 1
+            return job.banks if isinstance(job, GANG_JOBS) else 1
 
         while pending:
             t, job = pending[0]
@@ -764,11 +842,11 @@ class RequestScheduler:
             picked = [heapq.heappop(free) for _ in range(k)]
             gate = max(t, max(ft for ft, _ in picked))
             t_arr[jid], t_disp[jid] = t, gate
-            if isinstance(job, ShardedNttJob):
+            if isinstance(job, GANG_JOBS):
                 # gang reservation: the plan runs on its own sub-device
                 # timeline; the banks rejoin the pool at completion
                 flats = [f for _, f in picked]
-                dur, shard_counters, bus_busy, dev_c = self._sharded_latency(job, flats)
+                dur, shard_counters, bus_busy, dev_c = self._gang_latency(job, flats)
                 done = gate + dur
                 t_done[jid] = done
                 done_count += 1
@@ -837,13 +915,17 @@ class RequestScheduler:
         """
         policy = DEFAULT_POLICY if policy is None else policy
         requests = list(requests)
-        for req in {r.job for r in requests if isinstance(r.job, ShardedNttJob)}:
+        for req in {r.job for r in requests if isinstance(r.job, GANG_JOBS)}:
             self._validate_gang(req)
         fast = policy.backend == "fastpath"
         if fast and self.cfg.telemetry:
             raise ValueError(
                 "backend='fastpath' records no per-command telemetry; "
                 "disable cfg.telemetry or use backend='engine'")
+        # GangJob traffic composes with fastpath: its dispatch never steps
+        # the shared device (the primed resolver runs once per channel
+        # pattern and replays O(1) from the gang cache), so only sharded
+        # NTTs — which interleave on the interpreted device — are rejected.
         if fast and any(isinstance(r.job, ShardedNttJob) for r in requests):
             # fail loudly rather than silently timing the gang on the
             # interpreted engine while every other dispatch is fastpath
@@ -975,7 +1057,7 @@ class RequestScheduler:
                 deadline[row] = w.deadline
 
         def need(job: Job) -> int:
-            return job.banks if isinstance(job, ShardedNttJob) else 1
+            return job.banks if isinstance(job, GANG_JOBS) else 1
 
         i = 0  # arrival cursor over `order`
         while i < n or n_waiting:
@@ -1059,9 +1141,9 @@ class RequestScheduler:
             if tracer is not None:
                 qd_series[winner.qos].record(gate, float(len(winner_q)))
 
-            if isinstance(winner.job, ShardedNttJob):
+            if isinstance(winner.job, GANG_JOBS):
                 flats = [f for _, f in picked]
-                dur, shard_counters, bus_busy, dev_c = self._sharded_latency(
+                dur, shard_counters, bus_busy, dev_c = self._gang_latency(
                     winner.job, flats)
                 row = rid
                 rid += 1

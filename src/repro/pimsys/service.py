@@ -52,12 +52,12 @@ from typing import Iterable, Sequence
 from repro.core.pim_config import PimConfig
 from repro.pimsys.scheduler import (
     DEFAULT_POLICY,
+    GANG_JOBS,
     QOS_CLASSES,
     STATUS_REJECTED,
     SchedulerResult,
     ServicePolicy,
     ServiceRequest,
-    ShardedNttJob,
     job_rows,
     poisson_arrivals_ns,
 )
@@ -271,9 +271,11 @@ class DeviceService:
         job = plan.job()
         # validate NOW, not at flush: a bad submission must fail alone,
         # not poison the whole epoch's pending futures (sharded plans
-        # already validate at compile time)
-        if (not isinstance(job, ShardedNttJob)
-                and job_rows(plan.cfg, job) > plan.cfg.rows_per_bank):
+        # already validate at compile time; other gang jobs validate
+        # their declared bank/row needs against this device)
+        if isinstance(job, GANG_JOBS):
+            self.session.scheduler()._validate_gang(job)
+        elif job_rows(plan.cfg, job) > plan.cfg.rows_per_bank:
             raise ValueError(f"{job} does not fit in one bank")
         fut = PimFuture(self, self._count)
         deadline_ns = None if deadline_us is None else deadline_us * 1e3
@@ -303,11 +305,9 @@ class DeviceService:
             sched = self.session.scheduler()
             primed = set()
             for sub in pending:
-                if (not isinstance(sub.job, ShardedNttJob)
-                        and sub.job not in primed):
+                if sub.job not in primed:
                     primed.add(sub.job)
-                    sched.prime(sub.job, sub.plan.commands,
-                                param_trace=sub.plan.param_trace)
+                    sub.plan.prime_scheduler(sched)
             reqs = [ServiceRequest(sub.arrival_ns, sub.job, qos=sub.qos,
                                    deadline_ns=sub.deadline_ns)
                     for sub in pending]

@@ -158,8 +158,60 @@ class BatchOp:
 Op = NttOp | InverseNttOp | PolymulOp | ShardedNttOp | BatchOp
 
 
+# --------------------------------------------------------------------------
+# Op-handler registry — extension ops without session <-> subsystem cycles
+# --------------------------------------------------------------------------
+
+
+class OpHandler:
+    """Compile/run protocol for an op family the session does not know.
+
+    Subsystems (e.g. `repro.he`) register a handler per op class; the
+    session consults the registry before its builtin isinstance chains,
+    so extension ops flow through the same memoized `compile`, the same
+    `run` signature, the same `RunResult`, and the same service priming
+    (`CompiledPlan.prime_scheduler`) as the builtins — without the
+    session importing the subsystem.
+    """
+
+    def canonical(self, op):
+        """Normalize spelling variants (default: identity)."""
+        return op
+
+    def compile(self, sess: "PimSession", op) -> "CompiledPlan":
+        raise NotImplementedError
+
+    def run(self, sess: "PimSession", plan: "CompiledPlan", inputs, *,
+            ctx=None, single=None, time=True, backend="engine") -> "RunResult":
+        raise NotImplementedError
+
+    def job(self, plan: "CompiledPlan"):
+        """The scheduler job spec the plan executes as."""
+        raise TypeError(f"no scheduler job for {type(plan.op).__name__}")
+
+    def prime(self, plan: "CompiledPlan", sched: RequestScheduler) -> None:
+        """Prime the scheduler for queued dispatch of this plan."""
+        sched.prime(plan.job(), plan.commands, param_trace=plan.param_trace)
+
+
+_OP_HANDLERS: dict[type, OpHandler] = {}
+
+
+def register_op_handler(op_cls: type, handler: OpHandler) -> None:
+    """Register `handler` for every op of exact type `op_cls`."""
+    _OP_HANDLERS[op_cls] = handler
+
+
+def op_handler(op) -> OpHandler | None:
+    """The registered handler for `op`'s type, or None (a builtin op)."""
+    return _OP_HANDLERS.get(type(op))
+
+
 def _canonical(op: Op) -> Op:
     """Normalize spelling variants so they share one plan-cache entry."""
+    h = op_handler(op)
+    if h is not None:
+        return h.canonical(op)
     if isinstance(op, InverseNttOp):
         return NttOp(op.n, forward=False, scale_n_inv=op.scale_n_inv)
     if isinstance(op, BatchOp):
@@ -237,6 +289,8 @@ class CompiledPlan:
     sharded_plan: ShardedNttPlan | None = None  # exchange schedule owner
     inner: "CompiledPlan | None" = None         # BatchOp: the replicated plan
     count: int = 1
+    ext: object = dataclasses.field(            # handler-owned artifact
+        default=None, repr=False, compare=False)
     _twiddle_cache: tuple | None = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
     _param_trace_cache: tuple = dataclasses.field(
@@ -287,6 +341,9 @@ class CompiledPlan:
     def job(self):
         """The `RequestScheduler` job spec this plan executes as."""
         op = self.op
+        h = op_handler(op)
+        if h is not None:
+            return h.job(self)
         if isinstance(op, NttOp):
             return NttJob(op.n, forward=op.forward)
         if isinstance(op, PolymulOp):
@@ -294,6 +351,24 @@ class CompiledPlan:
         if isinstance(op, ShardedNttOp):
             return ShardedNttJob(op.n, banks=op.banks, forward=op.forward)
         raise TypeError(f"no scheduler job for {type(op).__name__}")
+
+    def prime_scheduler(self, sched: RequestScheduler) -> None:
+        """Prime `sched` so queued dispatch replays this frozen plan.
+
+        Single-bank plans hand their command stream (and residency
+        trace) to `RequestScheduler.prime`; sharded plans need nothing
+        (the scheduler's sharded cache rebuilds from the job spec);
+        handler ops delegate — gang ops prime their latency resolver.
+        The ONE priming entry point `DeviceService.flush` calls.
+        """
+        h = op_handler(self.op)
+        if h is not None:
+            h.prime(self, sched)
+            return
+        job = self.job()
+        if isinstance(job, ShardedNttJob):
+            return
+        sched.prime(job, self.commands, param_trace=self.param_trace)
 
     def trace_streams(self) -> dict[tuple[int, int], list[Command]] | None:
         """Statically placed command streams, or None when placement is
@@ -452,6 +527,9 @@ class PimSession:
 
     def _compile(self, op: Op) -> CompiledPlan:
         cfg = self.cfg
+        h = op_handler(op)
+        if h is not None:
+            return h.compile(self, op)
         if isinstance(op, NttOp):
             cmds = tuple(RowCentricMapper(cfg, op.n, forward=op.forward).commands())
             return CompiledPlan(
@@ -519,6 +597,10 @@ class PimSession:
         if plan.cfg != self.cfg:
             raise ValueError("plan was compiled for a different PimConfig")
         op = plan.op
+        h = op_handler(op)
+        if h is not None:
+            return h.run(self, plan, inputs, ctx=ctx, single=single,
+                         time=time, backend=backend)
         if isinstance(op, NttOp):
             return self._run_ntt(plan, inputs, ctx, time, backend)
         if isinstance(op, PolymulOp):

@@ -50,7 +50,7 @@ def test_mini_dryrun_all_kinds():
     import jax
     from repro.configs.base import ShapeConfig
     from repro.configs.registry import get_config
-    from repro.launch.dryrun import build_lowerable, parse_collectives
+    from repro.launch.dryrun import build_lowerable, cost_dict, parse_collectives
     from repro.launch.mesh import make_host_mesh
 
     cfg = get_config('qwen3-moe-30b-a3b').reduced()
@@ -61,7 +61,7 @@ def test_mini_dryrun_all_kinds():
         jitted, args = build_lowerable(cfg, shp, mesh)
         with mesh:
             compiled = jitted.lower(*args).compile()
-        cost = compiled.cost_analysis()
+        cost = cost_dict(compiled.cost_analysis())
         coll = parse_collectives(compiled.as_text())
         mem = compiled.memory_analysis()
         assert cost.get('flops', 0) > 0, shp

@@ -1,0 +1,290 @@
+"""Differential tests for `repro.he`: every ciphertext op bit-exact vs
+the big-integer CRT reference, keyswitch correctness under a known
+secret, device-plan timing sanity, and session/service integration."""
+import numpy as np
+import pytest
+
+import repro.he as he
+from repro.core.pim_config import PimConfig
+from repro.pimsys import (
+    GangJob,
+    PimSession,
+    ServicePolicy,
+    validate_chrome_trace,
+)
+
+N = 64
+CFG = PimConfig(num_channels=2, num_banks=4, param_cache_entries=8)
+SESS = PimSession(CFG)  # shared: exercises plan memoization across tests
+
+LEVELS = [2, 4, 8]
+
+
+def _basis(towers):
+    return he.make_basis(N, towers)
+
+
+# --------------------------------------------------------------------------
+# RNS layer vs big-int CRT oracles
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("towers", LEVELS)
+def test_crt_roundtrip(towers):
+    basis = _basis(towers)
+    rng = np.random.default_rng(towers)
+    coeffs = [int(x) for x in rng.integers(0, 1 << 60, N)]
+    res = basis.encode(coeffs)
+    assert res.shape == (towers, N) and res.dtype == np.uint32
+    assert basis.decode(res) == [c % basis.modulus for c in coeffs]
+
+
+@pytest.mark.parametrize("towers", LEVELS)
+def test_ntt_towers_roundtrip(towers):
+    basis = _basis(towers)
+    x = he.random_poly(basis, 11)
+    back = he.ntt_towers(basis, he.ntt_towers(basis, x, True), False)
+    assert np.array_equal(back, x)
+
+
+@pytest.mark.parametrize("towers", LEVELS)
+def test_ct_mul_matches_bigint_reference(towers):
+    basis = _basis(towers)
+    a, b = he.random_ct(basis, 1), he.random_ct(basis, 2)
+    got = he.ct_mul(basis, a, b)
+    want = he.ct_mul_reference(basis, a, b)
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("towers", LEVELS)
+def test_keyswitch_matches_bigint_reference(towers):
+    basis = _basis(towers)
+    s_from, s_to = he.make_secret(basis, 1), he.make_secret(basis, 0)
+    ksk = he.make_keyswitch_key(basis, s_from, s_to, seed=3)
+    c2 = he.random_poly(basis, 9)
+    got = he.keyswitch(basis, c2, ksk)
+    want = he.keyswitch_reference(basis, c2, ksk)
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("towers", LEVELS)
+def test_keyswitch_correct_under_known_secret(towers):
+    """<ks(c2), (1, s)> == c2 * s^2 for a relinearization key (e = 0)."""
+    basis = _basis(towers)
+    s = he.make_secret(basis, 0)
+    rlk = he.relin_key(basis, s, seed=7)
+    c2 = he.random_poly(basis, 13)
+    ks = he.keyswitch(basis, c2, rlk)
+    lhs = basis.decode(
+        (ks[0].astype(np.uint64)
+         + he.poly_mul_towers(basis, ks[1], s).astype(np.uint64))
+        % np.array(basis.moduli, np.uint64)[:, None])
+    rhs = basis.decode(
+        he.poly_mul_towers(basis, c2, he.poly_mul_towers(basis, s, s)))
+    assert lhs == rhs
+
+
+@pytest.mark.parametrize("towers", LEVELS)
+def test_relinearize_preserves_decryption(towers):
+    basis = _basis(towers)
+    s = he.make_secret(basis, 0)
+    rlk = he.relin_key(basis, s, seed=7)
+    a, b = he.random_ct(basis, 4), he.random_ct(basis, 5)
+    d = he.ct_mul(basis, a, b)
+    ct2 = he.relinearize(basis, d, rlk)
+    assert he.decrypt(basis, ct2, s) == he.decrypt(basis, d, s)
+
+
+@pytest.mark.parametrize("towers", LEVELS)
+def test_fused_matches_unfused(towers):
+    basis = _basis(towers)
+    s = he.make_secret(basis, 0)
+    rlk = he.relin_key(basis, s, seed=7)
+    a, b = he.random_ct(basis, 4), he.random_ct(basis, 5)
+    fused = he.ct_mul_relin(basis, a, b, rlk)
+    unfused = he.relinearize(basis, he.ct_mul(basis, a, b), rlk)
+    assert np.array_equal(fused, unfused)
+
+
+@pytest.mark.parametrize("towers", LEVELS)
+def test_rescale_matches_bigint_reference(towers):
+    basis = _basis(towers)
+    ct = he.random_ct(basis, 6)
+    got = he.rescale(basis, ct)
+    want = he.rescale_reference(basis, ct)
+    assert got.shape == (2, towers - 1, N)
+    assert np.array_equal(got, want)
+
+
+def test_base_extend_exact():
+    basis = _basis(4)
+    x = he.random_poly(basis, 21)
+    ext = basis.base_extend(x)
+    q = np.array(basis.moduli, np.uint64)
+    for j in range(4):
+        digit = [int(v) for v in _lift(basis, x[j], j)]
+        for i in range(4):
+            want = np.array([d % basis.moduli[i] for d in digit], np.uint32)
+            assert np.array_equal(ext[j, i], want)
+
+
+def _lift(basis, row, j):
+    return row.astype(np.uint64)  # digits are the [0, q_j) lift itself
+
+
+# --------------------------------------------------------------------------
+# Device plans: session compile/run
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("towers", LEVELS)
+def test_session_ct_mul_value_exact(towers):
+    basis = _basis(towers)
+    plan = SESS.compile(he.RlweCtMulOp(n=N, towers=towers))
+    a, b = he.random_ct(basis, 1), he.random_ct(basis, 2)
+    r = SESS.run(plan, a, b)
+    assert np.array_equal(r.value, he.ct_mul_reference(basis, a, b))
+    assert r.timing.towers == towers
+    assert r.timing.banks == min(towers, CFG.num_channels * CFG.num_banks)
+
+
+def test_session_keyswitch_and_rescale_values():
+    basis = _basis(4)
+    s = he.make_secret(basis, 0)
+    rlk = he.relin_key(basis, s, seed=7)
+    c2 = he.random_poly(basis, 9)
+    rk = SESS.run(SESS.compile(he.KeySwitchOp(n=N, towers=4)), c2, rlk)
+    assert np.array_equal(rk.value, he.keyswitch_reference(basis, c2, rlk))
+    ct = he.random_ct(basis, 6)
+    rr = SESS.run(SESS.compile(he.RescaleOp(n=N, towers=4)), ct)
+    assert np.array_equal(rr.value, he.rescale_reference(basis, ct))
+    a, b = he.random_ct(basis, 1), he.random_ct(basis, 2)
+    rf = SESS.run(SESS.compile(he.CtMulRelinOp(n=N, towers=4)), a, b, rlk)
+    assert np.array_equal(rf.value, he.ct_mul_relin(basis, a, b, rlk))
+
+
+def test_plans_memoized():
+    p1 = SESS.compile(he.RlweCtMulOp(n=N, towers=4))
+    p2 = SESS.compile(he.RlweCtMulOp(n=N, towers=4))
+    assert p1 is p2
+    assert p1.job() == GangJob(op=p1.op, banks=p1.ext.banks, rows=p1.ext.rows)
+
+
+def test_tower_parallel_speedup():
+    """banks = towers beats one bank, with efficiency >= 0.7 for the
+    compute-bound ops (the acceptance gate)."""
+    for op in (he.RlweCtMulOp(n=N, towers=4),
+               he.KeySwitchOp(n=N, towers=4),
+               he.CtMulRelinOp(n=N, towers=4)):
+        t = SESS.run(SESS.compile(op)).timing
+        assert t.single_ns > t.latency_ns
+        assert t.efficiency >= 0.7, (op, t.efficiency)
+        # superlinearity from per-tower param-cache residency is capped
+        assert t.speedup <= 1.5 * t.banks
+
+
+def test_keyswitch_moves_real_bursts():
+    t = SESS.run(SESS.compile(he.KeySwitchOp(n=N, towers=4))).timing
+    assert t.xfer_atoms > 0
+    assert t.xfer_hops > 0            # 2 channels -> some cross-channel
+    assert t.phase_ns["base_extend"] > 0
+    assert set(t.phase_ns) == {"base_extend", "digit_ntt", "inner", "inv"}
+
+
+def test_rescale_movement_dominated():
+    t = SESS.run(SESS.compile(he.RescaleOp(n=N, towers=4))).timing
+    assert t.xfer_atoms == 2 * 3 * (N // CFG.atom_words)  # 2 polys x 3 peers
+    assert t.phase_ns["mod_down"] > 0
+
+
+def test_single_bank_run_has_no_bursts():
+    op = he.KeySwitchOp(n=N, towers=3, banks=1)
+    t = SESS.run(SESS.compile(op)).timing
+    assert t.banks == 1
+    assert t.xfer_atoms == 0 and t.xfer_hops == 0
+    assert t.efficiency == pytest.approx(1.0)
+
+
+def test_param_cache_residency_per_tower():
+    """Co-located towers must not alias programs: 1 bank (all moduli
+    share one LRU) hits strictly less often than banks = towers."""
+    op_wide = he.KeySwitchOp(n=N, towers=4)
+    op_one = he.KeySwitchOp(n=N, towers=4, banks=1)
+    wide = SESS.run(SESS.compile(op_wide)).timing
+    one = SESS.run(SESS.compile(op_one)).timing
+    assert wide.param_hit_rate is not None
+    assert one.param_hit_rate <= wide.param_hit_rate
+
+
+def test_op_validation():
+    with pytest.raises(ValueError):
+        SESS.compile(he.RlweCtMulOp(n=48, towers=2))     # not a power of two
+    with pytest.raises(ValueError):
+        SESS.compile(he.RescaleOp(n=N, towers=1))        # nothing to drop
+    with pytest.raises(ValueError):
+        SESS.compile(he.KeySwitchOp(n=N, towers=2, banks=999))
+    with pytest.raises(ValueError):
+        plan = SESS.compile(he.RlweCtMulOp(n=N, towers=2))
+        basis = _basis(2)
+        SESS.run(plan, he.random_ct(basis, 1))           # arity
+    with pytest.raises(ValueError):
+        plan = SESS.compile(he.KeySwitchOp(n=N, towers=2))
+        other = he.make_basis(N, 3)
+        key = he.relin_key(other, he.make_secret(other, 0))
+        SESS.run(plan, he.random_poly(_basis(2), 1), key)  # wrong basis
+
+
+def test_fastpath_direct_run_rejected():
+    plan = SESS.compile(he.RlweCtMulOp(n=N, towers=2))
+    with pytest.raises(ValueError, match="fastpath"):
+        SESS.run(plan, backend="fastpath")
+
+
+def test_telemetry_spans_cover_base_extend():
+    sess = PimSession(PimConfig(num_channels=2, num_banks=4, telemetry=True))
+    basis = _basis(4)
+    rlk = he.relin_key(basis, he.make_secret(basis, 0), seed=7)
+    r = sess.run(sess.compile(he.KeySwitchOp(n=N, towers=4)),
+                 he.random_poly(basis, 9), rlk)
+    assert r.telemetry is not None
+    names = {p[1] for p in r.telemetry.tracer.phases}
+    assert {"base_extend", "digit_ntt", "inner", "inv"} <= names
+    assert validate_chrome_trace(r.telemetry.chrome_trace()) == []
+
+
+# --------------------------------------------------------------------------
+# Service integration: gang issue through the scheduler
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["engine", "fastpath"])
+def test_service_he_traffic(backend):
+    svc = SESS.service(ServicePolicy(backend=backend))
+    mul = SESS.compile(he.RlweCtMulOp(n=N, towers=4))
+    ks = SESS.compile(he.KeySwitchOp(n=N, towers=4))
+    futs = [svc.submit(mul) for _ in range(5)]
+    futs += [svc.submit(ks, qos="latency") for _ in range(3)]
+    done = [f.result() for f in svc.as_completed(futs)]
+    assert len(done) == 8
+    assert all(d.status == "completed" for d in done)
+    assert all(d.done_us > d.arrival_us for d in done)
+
+
+def test_service_mixed_he_and_polymul():
+    from repro.pimsys import PolymulOp
+    svc = SESS.service(ServicePolicy())
+    he_plan = SESS.compile(he.CtMulRelinOp(n=N, towers=3))
+    pm_plan = SESS.compile(PolymulOp(N))
+    futs = [svc.submit(he_plan), svc.submit(pm_plan), svc.submit(he_plan)]
+    done = [f.result() for f in svc.as_completed(futs)]
+    assert [d.status for d in done] == ["completed"] * 3
+
+
+def test_gang_job_validation():
+    sched = SESS.scheduler()
+    with pytest.raises(ValueError):
+        sched._validate_gang(GangJob(op="x", banks=0))
+    with pytest.raises(ValueError):
+        sched._validate_gang(GangJob(op="x", banks=10 ** 6))
+    with pytest.raises(TypeError, match="resolver"):
+        sched._gang_latency(GangJob(op="unprimed"), [0])
